@@ -1,0 +1,83 @@
+"""Kernel + codec micro-benchmarks.
+
+CPU wall-times for Pallas interpret mode are NOT TPU predictions — the derived
+columns report the host-side codec/decode rates (the quantities that matter for
+DPP sizing) and kernel-vs-oracle agreement."""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult, timeit
+from repro.core import events as ev
+from repro.kernels.delta_decode import ops as dd_ops
+from repro.kernels.delta_decode import ref as dd_ref
+from repro.kernels.embedding_bag import ops as eb_ops
+from repro.kernels.jagged import ops as jg_ops
+from repro.storage import columnar
+
+
+def run() -> List[BenchResult]:
+    out: List[BenchResult] = []
+    rng = np.random.default_rng(0)
+    schema = ev.default_schema()
+
+    # columnar codec encode/decode rate (host-side DPP hot path)
+    n = 50_000
+    ts = np.sort(rng.integers(0, 1 << 40, size=n)).astype(np.int64)
+    batch = {
+        "timestamp": ts,
+        "item_id": rng.integers(0, 1 << 22, size=n).astype(np.int64),
+        "action_type": rng.integers(0, 8, size=n).astype(np.int32),
+        "like": (rng.random(n) < 0.05).astype(np.int8),
+    }
+    blob = columnar.encode_stripe(batch, schema)
+    t_enc = timeit(lambda: columnar.encode_stripe(batch, schema))
+    t_dec = timeit(lambda: columnar.decode_stripe(blob, schema))
+    t_sel = timeit(lambda: columnar.decode_stripe(blob, schema,
+                                                  ("timestamp", "item_id")))
+    raw = sum(v.nbytes for v in batch.values())
+    out.append(BenchResult("codec/encode", t_enc,
+                           {"MB_per_s": round(raw / t_enc, 1),
+                            "compression_ratio": round(raw / len(blob), 2)}))
+    out.append(BenchResult("codec/decode_full", t_dec,
+                           {"MB_per_s": round(raw / t_dec, 1)}))
+    out.append(BenchResult("codec/decode_projected", t_sel,
+                           {"speedup_vs_full": round(t_dec / t_sel, 2)}))
+
+    # delta-decode kernel (interpret) vs oracle
+    deltas = rng.integers(0, 1 << 16, size=(8, 512)).astype(np.int32)
+    bases = rng.integers(0, 1 << 20, size=8).astype(np.int32)
+    dj, bj = jnp.asarray(deltas), jnp.asarray(bases)
+    got = dd_ops.delta_decode(dj, bj)
+    want = dd_ref.delta_decode(dj, bj)
+    t_k = timeit(lambda: dd_ops.delta_decode(dj, bj).block_until_ready())
+    out.append(BenchResult("kernel/delta_decode", t_k,
+                           {"exact_match": bool(np.array_equal(got, want)),
+                            "elements": deltas.size}))
+
+    # jagged->padded kernel (interpret)
+    lens = rng.integers(0, 96, size=64)
+    offsets = np.zeros(65, np.int32); np.cumsum(lens, out=offsets[1:])
+    values = rng.standard_normal((int(offsets[-1]), 128)).astype(np.float32)
+    vj, oj = jnp.asarray(values), jnp.asarray(offsets)
+    t_j = timeit(lambda: jg_ops.jagged_to_padded(vj, oj, 64).block_until_ready())
+    out.append(BenchResult("kernel/jagged_to_padded", t_j,
+                           {"rows": 64, "max_len": 64, "d": 128}))
+
+    # embedding bag kernel (interpret)
+    table = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 4096, (32, 20)), jnp.int32)
+    mask = jnp.ones((32, 20), bool)
+    t_e = timeit(lambda: eb_ops.embedding_bag(table, ids, mask)
+                 .block_until_ready())
+    out.append(BenchResult("kernel/embedding_bag", t_e,
+                           {"bags": 32, "bag_len": 20, "d": 128}))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

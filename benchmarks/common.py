@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: result records + the standard traffic sim."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import events as ev
+from repro.core.simulation import ProductionSim, SimConfig
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def csv(self) -> str:
+        derived = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.2f},{derived}"
+
+
+def timeit(fn: Callable[[], Any], repeats: int = 3) -> float:
+    """Median wall time in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def standard_sim(mode: str, users: int = 24, days: int = 6,
+                 req_per_day: int = 6, events_mean: float = 60.0,
+                 seed: int = 42, label_fn=None) -> ProductionSim:
+    cfg = SimConfig(
+        stream=ev.StreamConfig(
+            n_users=users, n_items=5_000, days=days + 1,
+            events_per_user_day_mean=events_mean, seed=seed,
+        ),
+        stripe_len=32,
+        requests_per_user_day=req_per_day,
+        lookback_ms=days * ev.MS_PER_DAY,
+        n_shards=8,
+        mode=mode,
+        seed=seed,
+    )
+    sim = ProductionSim(cfg)
+    if label_fn is not None:
+        sim.label_fn = label_fn
+    sim.run_days(days, capture_reference=False)
+    return sim

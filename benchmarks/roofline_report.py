@@ -1,0 +1,101 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dryrun_results.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results.json"
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str):
+    res = json.loads(RESULTS.read_text())
+    rows = []
+    for key, v in sorted(res.items()):
+        if not v.get("ok") or v["mesh"] != mesh:
+            continue
+        r = v.get("roofline_calibrated") or v["roofline"]
+        rows.append((v, r))
+    return rows
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | kind | compile | HBM/chip (args) | temp/chip | "
+           "collectives (per step) |",
+           "|---|---|---|---|---|---|---|"]
+    for v, r in rows:
+        mem = v["memory"]
+        args_b = mem.get("argument_size_in_bytes",
+                         mem.get("args_logical_bytes_per_chip", 0))
+        temp_b = mem.get("temp_size_in_bytes", 0)
+        cc = ", ".join(f"{k}x{c}" for k, c in
+                       sorted(v.get("calibration", v["collectives"])
+                              .get("counts", {}).items()))
+        out.append(
+            f"| {v['arch']} | {v['shape']} | {v['kind']} | "
+            f"{v['t_compile_s']}s | {fmt_b(args_b)} | {fmt_b(temp_b)} | {cc} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | t_compute | t_memory | t_collective | bottleneck |"
+           " MODEL_FLOPS | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for v, r in rows:
+        out.append(
+            f"| {v['arch']} | {v['shape']} | {fmt_t(r['t_compute_s'])} | "
+            f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['model_flops_total']:.3g} | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(mesh: str = "pod"):
+    """worst roofline fraction / most collective-bound / most paper-representative"""
+    rows = load(mesh)
+    scored = [(v, r) for v, r in rows]
+    worst = min(scored, key=lambda x: x[1]["roofline_fraction"])
+    coll = max(scored, key=lambda x: (x[1]["t_collective_s"]
+                                      / max(x[1]["t_compute_s"]
+                                            + x[1]["t_memory_s"], 1e-30)))
+    paper = next((v, r) for v, r in rows
+                 if v["arch"] == "dlrm-uih" and v["shape"] == "train_batch")
+    return {"worst_fraction": f"{worst[0]['arch']}|{worst[0]['shape']}",
+            "most_collective_bound": f"{coll[0]['arch']}|{coll[0]['shape']}",
+            "paper_representative": f"{paper[0]['arch']}|{paper[0]['shape']}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    print(f"## Dry-run ({args.mesh})\n")
+    print(dryrun_table(args.mesh))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(args.mesh))
+    print("\n## Hillclimb candidates\n")
+    print(json.dumps(pick_hillclimb(args.mesh), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark aggregator: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV and writes benchmarks/results.json."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+MODULES = [
+    "benchmarks.fig2_cost_wall",
+    "benchmarks.table1_system_efficiency",
+    "benchmarks.bench_prefetch",
+    "benchmarks.bench_affinity",
+    "benchmarks.bench_rebatch",
+    "benchmarks.bench_kernels",
+    "benchmarks.fig4_ne_scaling",
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    all_results = []
+    failures = []
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if only and only not in modname:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            results = mod.run()
+        except Exception as e:
+            failures.append(modname)
+            print(f"{modname},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for r in results:
+            print(r.csv(), flush=True)
+            all_results.append({"name": r.name, "us_per_call": r.us_per_call,
+                                "derived": r.derived})
+        print(f"# {modname} done in {time.time() - t0:.1f}s", flush=True)
+
+    out = Path(__file__).parent / "results.json"
+    out.write_text(json.dumps(all_results, indent=1, default=str))
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

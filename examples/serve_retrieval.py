@@ -1,0 +1,87 @@
+"""Serving driver: two-tower retrieval with batched requests.
+
+Builds the candidate index once (item-tower forward over the corpus), then
+serves batched user requests: UIH is materialized through the VLM pipeline at
+request time (short projection — the 'model C' tenant), the user tower embeds
+it, and retrieval scores the full corpus with one batched dot product.
+
+Run:  PYTHONPATH=src python examples/serve_retrieval.py [--requests 512]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.projection import TenantProjection
+from repro.core.simulation import ProductionSim, SimConfig
+from repro.dpp.featurize import FeatureSpec
+from repro.dpp.worker import DPPWorker
+from repro.models import recsys as R
+
+CORPUS = 4_096
+SEQ_LEN = 24
+BATCH = 64
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=512)
+    args = ap.parse_args()
+
+    cfg = R.TwoTowerConfig(name="serve", embed_dim=32, tower_mlp=(64, 32),
+                           item_vocab=CORPUS, user_vocab=1_024,
+                           uih_len=SEQ_LEN, compute_dtype=jnp.float32)
+    params = R.init_two_tower(jax.random.PRNGKey(0), cfg)
+
+    # --- offline: build the candidate index (item tower over the corpus) ---
+    item_fwd = jax.jit(lambda p, ids: R.two_tower_item(p, ids, cfg))
+    index = item_fwd(params, jnp.arange(CORPUS, dtype=jnp.int32))
+    print(f"candidate index: {index.shape} ({index.nbytes/1e6:.1f} MB)")
+
+    # --- online: VLM pipeline feeds the user tower ---
+    sim = ProductionSim(SimConfig(
+        stream=ev.StreamConfig(n_users=64, n_items=CORPUS, days=4,
+                               events_per_user_day_mean=40.0, seed=1),
+        stripe_len=32, requests_per_user_day=4, seed=1))
+    sim.run_days(3, capture_reference=False)
+    tenant = TenantProjection("retrieval", seq_len=SEQ_LEN,
+                              feature_groups=("core",),
+                              traits_per_group={"core": ("timestamp", "item_id")})
+    spec = FeatureSpec(seq_len=SEQ_LEN, uih_traits=("item_id",))
+    mat = sim.materializer(validate_checksum=False)
+    mat.window_cache_size = 256
+    worker = DPPWorker(mat, tenant, spec, sim.schema)
+
+    user_fwd = jax.jit(lambda p, uid, ids, mask: R.two_tower_user(
+        p, uid, ids, mask, cfg))
+
+    examples = (sim.examples * (args.requests // len(sim.examples) + 1))[
+        : args.requests]
+    served = 0
+    topk_acc = []
+    t0 = time.perf_counter()
+    for lo in range(0, len(examples), BATCH):
+        reqs = examples[lo : lo + BATCH]
+        feats = worker.process(reqs)             # request-time materialization
+        u = user_fwd(params,
+                     jnp.asarray(feats["user_id"] % cfg.user_vocab, jnp.int32),
+                     jnp.asarray(feats["uih_item_id"] % CORPUS, jnp.int32),
+                     jnp.asarray(feats["uih_mask"]))
+        scores = u @ index.T                     # (B, CORPUS)
+        top = jax.lax.top_k(scores, 10)[1]
+        top.block_until_ready()
+        served += len(reqs)
+        topk_acc.append(np.asarray(top))
+    dt = time.perf_counter() - t0
+    print(f"served {served} requests in {dt:.2f}s -> {served/dt:.0f} QPS "
+          f"(batch={BATCH}, corpus={CORPUS})")
+    print(f"immutable-store scans: {mat.immutable.stats.requests}, "
+          f"bytes: {mat.immutable.stats.bytes_scanned/1e6:.2f} MB")
+    print(f"sample top-10 for request 0: {topk_acc[0][0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore with keep-k
+retention, auto-resume, and elastic resharding to a different mesh."""

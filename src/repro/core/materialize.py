@@ -1,0 +1,267 @@
+"""Training-time versioned late materialization ("Time-Travel", paper §3.3).
+
+Given a logged training example, the materializer:
+  1. extracts the version metadata + the snapshotted mutable slice;
+  2. issues a bounded multi-range scan against the immutable store using the
+     logged temporal boundaries, with the tenant's projection pushed down
+     (sequence-length / feature-group / trait);
+  3. concatenates immutable + mutable components into the complete UIH that
+     exactly reproduces the inference-time state;
+  4. optionally validates the checksum logged at inference time.
+
+The logic depends only on the logged metadata, never on the training paradigm,
+so streaming and batch training share it unchanged (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.projection import TenantProjection
+from repro.core.versioning import TrainingExample, window_checksum
+from repro.storage.immutable_store import ImmutableUIHStore, ScanRequest
+
+
+class ChecksumMismatch(RuntimeError):
+    pass
+
+
+class StaleGeneration(RuntimeError):
+    """The example references an immutable generation whose window is no longer
+    reconstructible (e.g. right-to-delete scrubs changed the event set)."""
+
+
+@dataclasses.dataclass
+class MaterializeStats:
+    examples: int = 0
+    checksum_validated: int = 0
+    checksum_failures: int = 0
+    immutable_events: int = 0
+    mutable_events: int = 0
+
+
+class Materializer:
+    def __init__(
+        self,
+        immutable: ImmutableUIHStore,
+        schema: ev.TraitSchema,
+        validate_checksum: bool = False,
+        strict: bool = True,
+        window_cache_size: int = 0,
+    ):
+        self.immutable = immutable
+        self.schema = schema
+        self.validate_checksum = validate_checksum
+        self.strict = strict
+        self.stats = MaterializeStats()
+        # LRU cache of immutable windows persisting ACROSS batches (the DPP
+        # worker analogue of the store-side block cache, §4.2.3): all of a
+        # user's same-day requests share one immutable window, so streaming
+        # and user-bucketed batch jobs both hit heavily.
+        self.window_cache_size = window_cache_size
+        self._window_cache: "dict" = {}
+
+    # -- single example -------------------------------------------------------
+    def materialize(
+        self,
+        example: TrainingExample,
+        projection: Optional[TenantProjection] = None,
+    ) -> ev.EventBatch:
+        if example.is_fat:
+            # Fat Row path: UIH is already materialized; apply projection only.
+            return self._project_fat(example, projection)
+
+        meta = example.version
+        assert meta is not None, "VLM example missing version metadata"
+        mutable_part = example.mutable_uih or ev.empty_batch(self.schema)
+        n_mut = ev.batch_len(mutable_part)
+
+        groups = (
+            projection.feature_groups
+            if projection is not None
+            else tuple(self.schema.feature_groups)
+        )
+        # Sequence-length projection: the tenant wants the *most recent*
+        # projection.seq_len events of the full UIH. The immutable fetch uses
+        # the full tenant budget (not seq_len - n_mut) so the fetched window is
+        # shareable across same-user examples whose mutable slices differ; the
+        # final concat+trim keeps exactly seq_len events.
+        max_events = -1
+        if projection is not None:
+            max_events = projection.seq_len
+
+        full_fetch = self._wants_full_window(projection, meta.seq_len, max_events)
+        reqs = [
+            ScanRequest(
+                user_id=example.user_id,
+                group=g,
+                start_ts=meta.start_ts,
+                end_ts=meta.end_ts,
+                max_events=meta.seq_len if max_events < 0 else max_events,
+                traits=None if projection is None else projection.traits_for(self.schema, g),
+            )
+            for g in groups
+        ]
+        parts = self.immutable.multi_range_scan(reqs)
+        immutable_part = self._join_groups(parts)
+
+        if self.validate_checksum and meta.checksum and full_fetch:
+            self._check(example, immutable_part, meta)
+
+        out = self._concat_and_project(immutable_part, mutable_part, projection)
+        self.stats.examples += 1
+        self.stats.immutable_events += ev.batch_len(immutable_part)
+        self.stats.mutable_events += n_mut
+        return out
+
+    def materialize_batch(
+        self,
+        examples: Sequence[TrainingExample],
+        projection: Optional[TenantProjection] = None,
+    ) -> List[ev.EventBatch]:
+        """Batch path with **data-affinity amortization** (paper §4.2.3): when
+        temporally-adjacent examples of the same user share an identical
+        immutable window (same version metadata), the range scan is issued once
+        and shared across the batch."""
+        cache = {}
+        out: List[Optional[ev.EventBatch]] = [None] * len(examples)
+        for i, ex in enumerate(examples):
+            if ex.is_fat or ex.version is None:
+                out[i] = self.materialize(ex, projection)
+                continue
+            # key pins the *content* of the immutable window: same watermark +
+            # same length + same checksum => identical event set, even when the
+            # lookback start_ts differs slightly between adjacent requests
+            key = (
+                ex.user_id,
+                ex.version.end_ts,
+                ex.version.seq_len,
+                ex.version.checksum,
+                ex.version.generation,
+                id(projection),
+            )
+            imm = cache.get(key)
+            if imm is None and self.window_cache_size:
+                imm = self._window_cache.get(key)
+            if imm is None:
+                imm = self._fetch_immutable(ex, projection)
+                cache[key] = imm
+                if self.window_cache_size:
+                    self._window_cache[key] = imm
+                    while len(self._window_cache) > self.window_cache_size:
+                        self._window_cache.pop(next(iter(self._window_cache)))
+            mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
+            out[i] = self._concat_and_project(imm, mutable_part, projection)
+            self.stats.examples += 1
+            self.stats.immutable_events += ev.batch_len(imm)
+            self.stats.mutable_events += ev.batch_len(mutable_part)
+        return out  # type: ignore[return-value]
+
+    # -- helpers ---------------------------------------------------------------
+    def _fetch_immutable(
+        self, example: TrainingExample, projection: Optional[TenantProjection]
+    ) -> ev.EventBatch:
+        meta = example.version
+        assert meta is not None
+        groups = (
+            projection.feature_groups
+            if projection is not None
+            else tuple(self.schema.feature_groups)
+        )
+        max_events = -1 if projection is None else projection.seq_len
+        reqs = [
+            ScanRequest(
+                user_id=example.user_id,
+                group=g,
+                start_ts=meta.start_ts,
+                end_ts=meta.end_ts,
+                max_events=meta.seq_len if max_events < 0 else max_events,
+                traits=None if projection is None else projection.traits_for(self.schema, g),
+            )
+            for g in groups
+        ]
+        parts = self.immutable.multi_range_scan(reqs)
+        imm = self._join_groups(parts)
+        full = self._wants_full_window(projection, meta.seq_len, max_events)
+        if self.validate_checksum and meta.checksum and full:
+            self._check(example, imm, meta)
+        return imm
+
+    def _wants_full_window(self, projection, snap_len: int, max_events: int) -> bool:
+        return projection is None or max_events >= snap_len
+
+    def _join_groups(self, parts: Sequence[ev.EventBatch]) -> ev.EventBatch:
+        """Feature groups are horizontal partitions of the SAME event sequence
+        (compaction cuts one history into per-group stripes), so after applying
+        identical temporal bounds + length budget they are position-aligned."""
+        joined: ev.EventBatch = {}
+        n = None
+        for p in parts:
+            if n is None:
+                n = ev.batch_len(p)
+            else:
+                assert ev.batch_len(p) == n, "feature groups misaligned"
+                if n and "timestamp" in joined:
+                    assert np.array_equal(joined["timestamp"], p["timestamp"])
+            joined.update(p)
+        return joined
+
+    def _check(self, example, immutable_part: ev.EventBatch, meta) -> None:
+        need = {"timestamp", "item_id"}
+        if not need <= set(immutable_part):
+            return  # projection dropped identity columns; cannot validate
+        self.stats.checksum_validated += 1
+        got = window_checksum(immutable_part)
+        if got != meta.checksum or ev.batch_len(immutable_part) != meta.seq_len:
+            self.stats.checksum_failures += 1
+            if self.strict:
+                raise ChecksumMismatch(
+                    f"request {example.request_id}: immutable window changed "
+                    f"(gen {meta.generation} -> {self.immutable.generation}); "
+                    f"len {meta.seq_len} -> {ev.batch_len(immutable_part)}"
+                )
+
+    def _concat_and_project(
+        self,
+        immutable_part: ev.EventBatch,
+        mutable_part: ev.EventBatch,
+        projection: Optional[TenantProjection],
+    ) -> ev.EventBatch:
+        if projection is not None:
+            traits = projection.all_traits(self.schema)
+            mutable_part = ev.project_traits(mutable_part, [t for t in traits if t in mutable_part])
+            if immutable_part:
+                immutable_part = ev.project_traits(
+                    immutable_part, [t for t in traits if t in immutable_part]
+                )
+        full = ev.concat_batches([immutable_part, mutable_part])
+        if not full:
+            cols = (
+                projection.all_traits(self.schema)
+                if projection is not None
+                else self.schema.trait_names
+            )
+            return ev.empty_batch(self.schema, cols)
+        if projection is not None:
+            n = ev.batch_len(full)
+            if n > projection.seq_len:
+                full = ev.slice_batch(full, n - projection.seq_len, n)
+        return full
+
+    def _project_fat(
+        self, example: TrainingExample, projection: Optional[TenantProjection]
+    ) -> ev.EventBatch:
+        """Fat Row tenants must filter client-side — the monolithic row has
+        already been read in full (this is the multi-tenant penalty)."""
+        fat = example.fat_uih or ev.empty_batch(self.schema)
+        if projection is None:
+            return fat
+        traits = [t for t in projection.all_traits(self.schema) if t in fat]
+        out = ev.project_traits(fat, traits)
+        n = ev.batch_len(out)
+        if n > projection.seq_len:
+            out = ev.slice_batch(out, n - projection.seq_len, n)
+        return out

@@ -1,0 +1,61 @@
+"""Multi-tenant sequence projection (paper §2.3, §4.1.2, §4.2.2).
+
+Each model tenant declares its UIH requirements — target sequence length,
+feature groups, and optionally a trait subset per group. The DPP query engine
+pushes these down to the immutable store so short-sequence / few-feature
+tenants never over-fetch (eliminating the multi-tenant penalty).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core import events as ev
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantProjection:
+    name: str
+    seq_len: int                                 # target UIH length (events)
+    feature_groups: Tuple[str, ...]              # groups the model consumes
+    traits_per_group: Optional[Mapping[str, Tuple[str, ...]]] = None
+
+    def traits_for(self, schema: ev.TraitSchema, group: str) -> Tuple[str, ...]:
+        if self.traits_per_group and group in self.traits_per_group:
+            cols = self.traits_per_group[group]
+            if "timestamp" not in cols:
+                cols = ("timestamp",) + tuple(cols)
+            return tuple(cols)
+        return schema.group_traits(group)
+
+    def all_traits(self, schema: ev.TraitSchema) -> Tuple[str, ...]:
+        seen = []
+        for g in self.feature_groups:
+            for t in self.traits_for(schema, g):
+                if t not in seen:
+                    seen.append(t)
+        return tuple(seen)
+
+
+# The paper's three evaluation tenants (Table 1): long / mid / short sequence.
+def table1_tenants(
+    long_len: int = 2048, mid_len: int = 512, short_len: int = 64
+) -> Dict[str, TenantProjection]:
+    return {
+        "model_a": TenantProjection(
+            name="model_a",  # flagship late-stage ranking: long seq, all groups
+            seq_len=long_len,
+            feature_groups=("core", "engagement", "sideinfo"),
+        ),
+        "model_b": TenantProjection(
+            name="model_b",  # pre-ranking: mid seq, no sideinfo
+            seq_len=mid_len,
+            feature_groups=("core", "engagement"),
+        ),
+        "model_c": TenantProjection(
+            name="model_c",  # retrieval: short seq, core ids only
+            seq_len=short_len,
+            feature_groups=("core",),
+            traits_per_group={"core": ("timestamp", "item_id")},
+        ),
+    }

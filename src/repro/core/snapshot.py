@@ -1,0 +1,142 @@
+"""Inference-time snapshotting (paper §3.3, Fig. 3).
+
+During ranking, the service fetches the mutable tier (recent events) and the
+immutable tier (long-term history) to assemble the complete UIH for model
+inference. Under versioned late materialization, the logged training example
+persists only:
+
+  * the **mutable** slice (small: events newer than the immutable watermark),
+    physically snapshotted at T_request so no late-arriving event can
+    contaminate it; and
+  * O(1) **version metadata** for the immutable window (start_ts = lookback
+    bound, end_ts = immutable watermark, seq_len, checksum, generation).
+
+The Fat Row baseline snapshotter logs the complete merged UIH instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import events as ev
+from repro.core.versioning import TrainingExample, VersionMetadata, window_checksum
+from repro.storage.immutable_store import ImmutableUIHStore, ScanRequest
+from repro.storage.mutable_store import MutableUIHStore
+
+
+@dataclasses.dataclass
+class SnapshotterConfig:
+    lookback_ms: int = 365 * ev.MS_PER_DAY
+    max_seq_len: int = 1 << 20          # union-dataset maximum requirement
+    with_checksum: bool = True
+    nonseq_bytes: int = 1024            # opaque non-sequence feature payload
+
+
+class BaseSnapshotter:
+    def __init__(
+        self,
+        mutable: MutableUIHStore,
+        immutable: ImmutableUIHStore,
+        schema: ev.TraitSchema,
+        cfg: Optional[SnapshotterConfig] = None,
+    ):
+        self.mutable = mutable
+        self.immutable = immutable
+        self.schema = schema
+        self.cfg = cfg or SnapshotterConfig()
+        self._next_request_id = 0
+
+    def _fetch_both_tiers(self, user_id: int, request_ts: int):
+        """The inference read path: assemble complete UIH at T_request."""
+        watermark = self.immutable.watermark(user_id)
+        end_ts = min(watermark, request_ts)
+        start_ts = max(0, request_ts - self.cfg.lookback_ms)
+        reqs = [
+            ScanRequest(user_id=user_id, group=g, start_ts=start_ts, end_ts=end_ts)
+            for g in self.schema.feature_groups
+        ]
+        parts = self.immutable.multi_range_scan(reqs)
+        immutable_part: ev.EventBatch = {}
+        for p in parts:
+            immutable_part.update(p)
+        # mutable tier: strictly newer than the immutable watermark, <= T_request
+        mutable_part = self.mutable.read(user_id, end_ts, request_ts)
+        return immutable_part, mutable_part, start_ts, end_ts
+
+    def inference_uih(self, user_id: int, request_ts: int) -> ev.EventBatch:
+        """Complete UIH as seen by the ranking model at T_request (ground truth
+        for O2O-consistency checks)."""
+        imm, mut, _, _ = self._fetch_both_tiers(user_id, request_ts)
+        return ev.concat_batches([imm, mut]) or ev.empty_batch(self.schema)
+
+    def _alloc_id(self) -> int:
+        rid = self._next_request_id
+        self._next_request_id += 1
+        return rid
+
+    def _context(self, request_id: int) -> bytes:
+        """Deterministic stand-in for the non-sequence feature payload
+        (identical across VLM and Fat Row snapshotters for fair accounting)."""
+        import numpy as _np
+
+        return _np.random.default_rng(request_id).bytes(self.cfg.nonseq_bytes)
+
+
+class VLMSnapshotter(BaseSnapshotter):
+    """Versioned late materialization: log mutable slice + version metadata."""
+
+    def snapshot(
+        self,
+        user_id: int,
+        request_ts: int,
+        candidate: Dict[str, int],
+        labels: Dict[str, float],
+        label_ts: Optional[int] = None,
+    ) -> TrainingExample:
+        imm, mut, start_ts, end_ts = self._fetch_both_tiers(user_id, request_ts)
+        seq_len = ev.batch_len(imm)
+        checksum = (
+            window_checksum(imm) if (self.cfg.with_checksum and seq_len) else 0
+        )
+        return TrainingExample(
+            request_id=self._alloc_id(),
+            user_id=user_id,
+            request_ts=request_ts,
+            label_ts=label_ts if label_ts is not None else request_ts,
+            candidate=dict(candidate),
+            labels=dict(labels),
+            mutable_uih=mut,
+            context=self._context(self._next_request_id - 1),
+            version=VersionMetadata(
+                start_ts=start_ts,
+                end_ts=end_ts,
+                seq_len=seq_len,
+                checksum=checksum,
+                generation=self.immutable.generation,
+            ),
+        )
+
+
+class FatRowSnapshotter(BaseSnapshotter):
+    """Industry-standard baseline: physically pre-materialize the full UIH."""
+
+    def snapshot(
+        self,
+        user_id: int,
+        request_ts: int,
+        candidate: Dict[str, int],
+        labels: Dict[str, float],
+        label_ts: Optional[int] = None,
+    ) -> TrainingExample:
+        imm, mut, _, _ = self._fetch_both_tiers(user_id, request_ts)
+        fat = ev.concat_batches([imm, mut]) or ev.empty_batch(self.schema)
+        return TrainingExample(
+            request_id=self._alloc_id(),
+            user_id=user_id,
+            request_ts=request_ts,
+            label_ts=label_ts if label_ts is not None else request_ts,
+            candidate=dict(candidate),
+            labels=dict(labels),
+            fat_uih=fat,
+            context=self._context(self._next_request_id - 1),
+        )

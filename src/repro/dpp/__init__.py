@@ -1,0 +1,3 @@
+"""Disaggregated Data PreProcessing (paper §4.2): workers that materialize
+base batches, trainer-side rebatching client, pipelined I/O prefetch, elastic
+autoscaling, and data-affinity planning."""

@@ -1,0 +1,110 @@
+"""Trainer-side DPP client (paper §4.2.1): rebatching.
+
+DPP workers emit *base batches* sized to their memory budget; the trainer-side
+client asynchronously buffers, merges, and reshuffles them into the model's
+full batch. This decouples worker memory pressure from the GPU's large-batch
+requirement and raises worker thread concurrency.
+
+Also hosts the GPU-starvation accounting the elastic controller consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.dpp.featurize import merge_base_batches, reshuffle
+
+
+@dataclasses.dataclass
+class ClientStats:
+    full_batches: int = 0
+    starved_time_s: float = 0.0    # trainer waited on data (GPU idle)
+    train_time_s: float = 0.0      # trainer consumed data (GPU busy)
+
+    @property
+    def starvation_pct(self) -> float:
+        total = self.starved_time_s + self.train_time_s
+        if total <= 0:
+            return 0.0
+        return 100.0 * self.starved_time_s / total
+
+
+class RebatchingClient:
+    """Merges base batches of size b into full batches of size B = k*b.
+
+    ``put`` is called by DPP worker threads; ``get_full_batch`` by the trainer.
+    """
+
+    def __init__(
+        self,
+        full_batch_size: int,
+        buffer_batches: int = 8,
+        shuffle_seed: Optional[int] = 0,
+    ):
+        self.full_batch_size = full_batch_size
+        self._q: "queue.Queue" = queue.Queue(maxsize=buffer_batches)
+        self._pending: List[Dict[str, np.ndarray]] = []
+        self._pending_rows = 0
+        self._lock = threading.Lock()
+        self._closed = threading.Event()
+        self.shuffle_seed = shuffle_seed
+        self.stats = ClientStats()
+
+    # -- producer side (DPP workers) --------------------------------------------
+    def put(self, base_batch: Dict[str, np.ndarray]) -> None:
+        rows = len(next(iter(base_batch.values())))
+        with self._lock:
+            self._pending.append(base_batch)
+            self._pending_rows += rows
+            if self._pending_rows >= self.full_batch_size:
+                merged = merge_base_batches(self._pending)
+                self._pending = []
+                self._pending_rows = 0
+            else:
+                return
+        # emit exact-size full batches; spill remainder back to pending
+        n = len(next(iter(merged.values())))
+        emitted = 0
+        while n - emitted >= self.full_batch_size:
+            full = {k: v[emitted : emitted + self.full_batch_size]
+                    for k, v in merged.items()}
+            if self.shuffle_seed is not None:
+                full = reshuffle(full, self.shuffle_seed + self.stats.full_batches)
+            self._q.put(full)
+            emitted += self.full_batch_size
+        if emitted < n:
+            rest = {k: v[emitted:] for k, v in merged.items()}
+            with self._lock:
+                self._pending.insert(0, rest)
+                self._pending_rows += n - emitted
+
+    def close(self) -> None:
+        self._closed.set()
+        self._q.put(None)
+
+    # -- consumer side (trainer loop) --------------------------------------------
+    def get_full_batch(self, timeout: Optional[float] = None):
+        t0 = time.perf_counter()
+        try:
+            out = self._q.get(timeout=timeout)
+        except queue.Empty:
+            out = None
+        self.stats.starved_time_s += time.perf_counter() - t0
+        if out is not None:
+            self.stats.full_batches += 1
+        return out
+
+    def record_train_step(self, seconds: float) -> None:
+        self.stats.train_time_s += seconds
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            b = self.get_full_batch()
+            if b is None:
+                return
+            yield b

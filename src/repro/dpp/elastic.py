@@ -1,0 +1,142 @@
+"""Elastic DPP scaling + straggler mitigation (paper §4.2.1; fault tolerance).
+
+The controller watches job-level GPU-starvation % (trainer idle) and worker
+waste % (CPU idle) and adjusts the provisioned worker count so training stays
+compute-bound. The pool re-dispatches work items whose worker exceeded the
+straggler deadline (speculative execution), and survives worker crashes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    min_workers: int = 1
+    max_workers: int = 32
+    target_starvation_pct: float = 2.0   # scale up above this
+    target_waste_pct: float = 60.0       # scale down above this
+    step: int = 1
+
+
+class ElasticController:
+    """Pure decision logic (separated from the pool so it is unit-testable)."""
+
+    def __init__(self, cfg: ElasticConfig):
+        self.cfg = cfg
+        self.decisions: List[int] = []
+
+    def decide(self, workers: int, starvation_pct: float, waste_pct: float) -> int:
+        new = workers
+        if starvation_pct > self.cfg.target_starvation_pct:
+            new = min(self.cfg.max_workers, workers + self.cfg.step)
+        elif waste_pct > self.cfg.target_waste_pct and starvation_pct == 0.0:
+            new = max(self.cfg.min_workers, workers - self.cfg.step)
+        self.decisions.append(new)
+        return new
+
+
+@dataclasses.dataclass
+class PoolStats:
+    completed: int = 0
+    speculative_retries: int = 0
+    worker_failures: int = 0
+
+
+class StragglerAwarePool:
+    """Thread pool with deadline-based speculative re-dispatch.
+
+    Work items are idempotent (materialization is a pure read), so running a
+    straggler's item twice is safe — first completion wins.
+    """
+
+    def __init__(
+        self,
+        work_fn: Callable[[object], object],
+        n_workers: int = 2,
+        straggler_deadline_s: float = 5.0,
+    ):
+        self.work_fn = work_fn
+        self.straggler_deadline_s = straggler_deadline_s
+        self._task_q: "queue.Queue" = queue.Queue()
+        self._done: Dict[int, object] = {}
+        self._done_cv = threading.Condition()
+        self._inflight: Dict[int, float] = {}   # task id -> dispatch time
+        self._retried: set = set()
+        self._stop = threading.Event()
+        self.stats = PoolStats()
+        self._threads: List[threading.Thread] = []
+        self.resize(n_workers)
+
+    # -- worker loop -------------------------------------------------------------
+    def _loop(self, me: int) -> None:
+        while not self._stop.is_set():
+            try:
+                task_id, payload = self._task_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            with self._done_cv:
+                if task_id in self._done:   # speculative duplicate already done
+                    continue
+                self._inflight[task_id] = time.perf_counter()
+            try:
+                result = self.work_fn(payload)
+            except Exception:
+                self.stats.worker_failures += 1
+                # crash-equivalent: re-queue the item for another worker
+                self._task_q.put((task_id, payload))
+                continue
+            with self._done_cv:
+                if task_id not in self._done:
+                    self._done[task_id] = result
+                    self.stats.completed += 1
+                self._inflight.pop(task_id, None)
+                self._done_cv.notify_all()
+
+    # -- API ---------------------------------------------------------------------
+    def submit(self, task_id: int, payload: object) -> None:
+        self._task_q.put((task_id, payload))
+
+    def _respeculate(self, pending_payloads: Dict[int, object]) -> None:
+        now = time.perf_counter()
+        with self._done_cv:
+            for tid, started in list(self._inflight.items()):
+                if (
+                    now - started > self.straggler_deadline_s
+                    and tid not in self._retried
+                    and tid in pending_payloads
+                ):
+                    self._retried.add(tid)
+                    self.stats.speculative_retries += 1
+                    self._task_q.put((tid, pending_payloads[tid]))
+
+    def gather(self, task_ids, payloads: Dict[int, object], timeout_s: float = 60.0):
+        """Wait for all task_ids, re-dispatching stragglers as needed."""
+        deadline = time.perf_counter() + timeout_s
+        while True:
+            with self._done_cv:
+                if all(t in self._done for t in task_ids):
+                    return [self._done[t] for t in task_ids]
+                self._done_cv.wait(timeout=0.05)
+            self._respeculate(payloads)
+            if time.perf_counter() > deadline:
+                raise TimeoutError("pool gather timed out")
+
+    def resize(self, n_workers: int) -> None:
+        while len(self._threads) < n_workers:
+            t = threading.Thread(target=self._loop, args=(len(self._threads),),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+        # shrink is cooperative: extra threads exit when stop is set; for the
+        # simulation we only record the logical size
+        self.n_workers = n_workers
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=1.0)

@@ -1,0 +1,80 @@
+"""Featurization: materialized UIH event batches -> fixed-shape training arrays.
+
+Pads/truncates the jagged per-example sequences into dense [B, L] arrays with a
+validity mask (host-side numpy mirror of the ``repro.kernels.jagged`` Pallas
+device kernel — see DESIGN.md §3 on where the device path takes over).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.versioning import TrainingExample
+
+
+@dataclasses.dataclass
+class FeatureSpec:
+    seq_len: int                       # padded UIH length
+    uih_traits: Sequence[str]          # traits to lift into [B, L] arrays
+    candidate_fields: Sequence[str] = ("item_id",)
+    label_fields: Sequence[str] = ("click",)
+
+
+def pad_sequences(
+    seqs: Sequence[np.ndarray], seq_len: int, dtype=None, left_align: bool = False
+) -> np.ndarray:
+    """Right-aligned (most-recent-last) pad/truncate to [B, seq_len]."""
+    b = len(seqs)
+    dtype = dtype or (seqs[0].dtype if b else np.int64)
+    out = np.zeros((b, seq_len), dtype=dtype)
+    for i, s in enumerate(seqs):
+        s = s[-seq_len:]
+        if left_align:
+            out[i, : len(s)] = s
+        else:
+            out[i, seq_len - len(s):] = s
+    return out
+
+
+def featurize(
+    examples: Sequence[TrainingExample],
+    uihs: Sequence[ev.EventBatch],
+    spec: FeatureSpec,
+) -> Dict[str, np.ndarray]:
+    """Build one base batch of dense arrays from materialized UIH sequences."""
+    assert len(examples) == len(uihs)
+    b = len(examples)
+    lens = np.array([min(ev.batch_len(u), spec.seq_len) for u in uihs], np.int32)
+    batch: Dict[str, np.ndarray] = {"uih_len": lens}
+    for trait in spec.uih_traits:
+        cols = [u.get(trait, np.zeros(0, np.int64)) for u in uihs]
+        batch[f"uih_{trait}"] = pad_sequences(cols, spec.seq_len)
+    mask = np.zeros((b, spec.seq_len), dtype=np.bool_)
+    for i, n in enumerate(lens):
+        mask[i, spec.seq_len - n:] = True
+    batch["uih_mask"] = mask
+    for f in spec.candidate_fields:
+        batch[f"cand_{f}"] = np.array(
+            [e.candidate.get(f, 0) for e in examples], np.int64
+        )
+    for f in spec.label_fields:
+        batch[f"label_{f}"] = np.array(
+            [e.labels.get(f, 0.0) for e in examples], np.float32
+        )
+    batch["request_ts"] = np.array([e.request_ts for e in examples], np.int64)
+    batch["user_id"] = np.array([e.user_id for e in examples], np.int64)
+    return batch
+
+
+def merge_base_batches(batches: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    keys = batches[0].keys()
+    return {k: np.concatenate([b[k] for b in batches], axis=0) for k in keys}
+
+
+def reshuffle(batch: Dict[str, np.ndarray], seed: int) -> Dict[str, np.ndarray]:
+    n = len(next(iter(batch.values())))
+    perm = np.random.default_rng(seed).permutation(n)
+    return {k: v[perm] for k, v in batch.items()}

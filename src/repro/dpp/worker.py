@@ -1,0 +1,141 @@
+"""DPP worker (paper §4.2.1-4.2.2): the vectorized query-engine operator.
+
+A worker executes the specialized index join — probe side = primary training
+examples, build side = the immutable UIH store — then featurizes the result
+into a *base batch* sized to fit the worker's memory budget. Pipelined I/O
+prefetching overlaps the immutable lookup for batch N with the probe-side read
+for batch N+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.materialize import Materializer
+from repro.core.projection import TenantProjection
+from repro.core.versioning import TrainingExample
+from repro.dpp.featurize import FeatureSpec, featurize
+
+ProbeFn = Callable[[int], Optional[List[TrainingExample]]]  # batch idx -> examples
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    base_batches: int = 0
+    examples: int = 0
+    probe_time_s: float = 0.0     # primary training-table read
+    lookup_time_s: float = 0.0    # immutable UIH multi-range scan
+    featurize_time_s: float = 0.0
+    total_time_s: float = 0.0
+
+    @property
+    def busy_time_s(self) -> float:
+        return self.probe_time_s + self.lookup_time_s + self.featurize_time_s
+
+    @property
+    def waste_pct(self) -> float:
+        """CPU idle share of wall time (paper's 'worker waste percentage')."""
+        if self.total_time_s <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.busy_time_s / self.total_time_s) * 100.0
+
+
+class DPPWorker:
+    def __init__(
+        self,
+        materializer: Materializer,
+        projection: TenantProjection,
+        feature_spec: FeatureSpec,
+        schema: ev.TraitSchema,
+        probe_latency_s: float = 0.0,   # emulated primary-table read latency
+    ):
+        self.materializer = materializer
+        self.projection = projection
+        self.feature_spec = feature_spec
+        self.schema = schema
+        self.probe_latency_s = probe_latency_s
+        self.stats = WorkerStats()
+
+    # -- single base batch -----------------------------------------------------
+    def _lookup(self, examples: List[TrainingExample]) -> List[ev.EventBatch]:
+        t0 = time.perf_counter()
+        uihs = self.materializer.materialize_batch(examples, self.projection)
+        self.stats.lookup_time_s += time.perf_counter() - t0
+        return uihs
+
+    def _featurize(self, examples, uihs) -> Dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        out = featurize(examples, uihs, self.feature_spec)
+        self.stats.featurize_time_s += time.perf_counter() - t0
+        self.stats.base_batches += 1
+        self.stats.examples += len(examples)
+        return out
+
+    def process(self, examples: List[TrainingExample]) -> Dict[str, np.ndarray]:
+        return self._featurize(examples, self._lookup(examples))
+
+    def _probe(self, probe: ProbeFn, idx: int) -> Optional[List[TrainingExample]]:
+        t0 = time.perf_counter()
+        out = probe(idx)
+        if self.probe_latency_s and out is not None:
+            time.sleep(self.probe_latency_s)
+        self.stats.probe_time_s += time.perf_counter() - t0
+        return out
+
+    # -- serial execution (baseline for the prefetch benchmark) -----------------
+    def run_serial(self, probe: ProbeFn) -> Iterator[Dict[str, np.ndarray]]:
+        t_start = time.perf_counter()
+        idx = 0
+        while True:
+            examples = self._probe(probe, idx)
+            if examples is None:
+                break
+            uihs = self._lookup(examples)
+            yield self._featurize(examples, uihs)
+            idx += 1
+        self.stats.total_time_s += time.perf_counter() - t_start
+
+    # -- pipelined execution (paper §4.2.2) --------------------------------------
+    def run_pipelined(self, probe: ProbeFn) -> Iterator[Dict[str, np.ndarray]]:
+        """Overlap the immutable-store lookup for batch N with the probe-side
+        read for batch N+1 using a single prefetch thread (double buffering)."""
+        t_start = time.perf_counter()
+        probe_q: "queue.Queue" = queue.Queue(maxsize=2)
+
+        def producer():
+            idx = 0
+            while True:
+                examples = self._probe(probe, idx)
+                probe_q.put(examples)
+                if examples is None:
+                    return
+                idx += 1
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        while True:
+            examples = probe_q.get()
+            if examples is None:
+                break
+            uihs = self._lookup(examples)
+            yield self._featurize(examples, uihs)
+        th.join()
+        self.stats.total_time_s += time.perf_counter() - t_start
+
+
+def probe_from_list(
+    examples: Sequence[TrainingExample], base_batch_size: int
+) -> ProbeFn:
+    def probe(idx: int) -> Optional[List[TrainingExample]]:
+        lo = idx * base_batch_size
+        if lo >= len(examples):
+            return None
+        return list(examples[lo : lo + base_batch_size])
+
+    return probe

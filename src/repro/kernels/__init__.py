@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the materialization + recsys hot paths.
+
+Each kernel directory holds <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper; interpret=True on CPU), and ref.py
+(pure-jnp oracle used by the allclose test sweeps)."""

@@ -1,0 +1,26 @@
+"""Public jit'd wrapper: pads ragged shapes to block multiples, picks
+interpret mode automatically off-TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delta_decode.delta_decode import delta_decode_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def delta_decode(deltas: jax.Array, bases: jax.Array,
+                 block_b: int = 8, block_n: int = 128) -> jax.Array:
+    """Batched stripe timestamp decode; auto-pads to VMEM block multiples."""
+    b, n = deltas.shape
+    bb = min(block_b, max(1, b))
+    pb = (bb - b % bb) % bb
+    pn = (block_n - n % block_n) % block_n
+    d = jnp.pad(deltas.astype(jnp.int32), ((0, pb), (0, pn)))
+    bs = jnp.pad(bases.astype(jnp.int32), (0, pb))
+    out = delta_decode_kernel(d, bs, block_b=bb, block_n=block_n,
+                              interpret=not _on_tpu())
+    return out[:b, :n]

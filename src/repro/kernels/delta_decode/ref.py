@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for batched delta decoding of columnar timestamp stripes."""
+import jax.numpy as jnp
+
+
+def delta_decode(deltas: jnp.ndarray, bases: jnp.ndarray) -> jnp.ndarray:
+    """deltas: (B, N) int32 per-stripe deltas (deltas[:, 0] == 0 by codec
+    construction); bases: (B,) int32 stripe base offsets.
+    Returns (B, N) int32 decoded offsets-from-epoch-base."""
+    return jnp.cumsum(deltas, axis=1, dtype=jnp.int32) + bases[:, None]

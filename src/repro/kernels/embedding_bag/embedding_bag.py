@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: EmbeddingBag — fused gather + masked bag reduction.
+
+The recsys hot path (kernel_taxonomy §B.6 / §B.11): the table is far larger
+than VMEM, so it stays in HBM (pl.ANY) and rows are fetched by **double-
+buffered async DMA** — while row l is being accumulated, the DMA for row l+1
+is already in flight, hiding HBM gather latency behind the VPU adds. ids live
+in SMEM for scalar control flow; the (1, D) accumulator and the two row slots
+live in VMEM.
+
+(On real v5e hardware this op belongs to SparseCore; this is the TensorCore-
+resident formulation, which is also what one uses when embedding output feeds
+straight into MXU matmuls.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, mask_ref, table_ref, out_ref, acc, slots, sems, *, bag_len):
+    def dma(l, slot):
+        return pltpu.make_async_copy(
+            table_ref.at[pl.ds(ids_ref[0, l], 1), :], slots.at[slot], sems.at[slot]
+        )
+
+    dma(0, 0).start()
+
+    def body(l, _):
+        slot = jax.lax.rem(l, 2)
+        nxt = jax.lax.rem(l + 1, 2)
+
+        @pl.when(l + 1 < bag_len)
+        def _prefetch():
+            dma(l + 1, nxt).start()
+
+        dma(l, slot).wait()
+        w = mask_ref[0, l].astype(acc.dtype)
+        acc[...] += slots[slot] * w
+        return 0
+
+    acc[...] = jnp.zeros_like(acc)
+    jax.lax.fori_loop(0, bag_len, body, 0)
+    out_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bag_len", "interpret"))
+def embedding_bag_kernel(
+    table: jax.Array,      # (V, D) — HBM resident
+    ids: jax.Array,        # (B, L) int32
+    mask: jax.Array,       # (B, L) float (0/1)
+    bag_len: int,
+    interpret: bool = False,
+) -> jax.Array:
+    b, l = ids.shape
+    v, d = table.shape
+    assert l == bag_len
+    return pl.pallas_call(
+        functools.partial(_kernel, bag_len=bag_len),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i: (i, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), table.dtype),
+            pltpu.VMEM((2, 1, d), table.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(ids, mask, table)

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the fused EmbeddingBag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  combiner: str = "sum") -> jax.Array:
+    """(V, D) table, (B, L) ids/mask -> (B, D). Lane-pads D to 128."""
+    v, d = table.shape
+    dp = (128 - d % 128) % 128
+    t = jnp.pad(table, ((0, 0), (0, dp)))
+    out = embedding_bag_kernel(
+        t, ids.astype(jnp.int32), mask.astype(t.dtype), bag_len=ids.shape[1],
+        interpret=not _on_tpu(),
+    )[:, :d]
+    if combiner == "mean":
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1).astype(out.dtype)
+        out = out / denom
+    return out

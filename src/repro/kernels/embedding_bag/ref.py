@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + masked segment reduction)."""
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  combiner: str = "sum") -> jax.Array:
+    """table (V, D); ids (B, L) int32; mask (B, L). Returns (B, D)."""
+    emb = table[ids] * mask[..., None].astype(table.dtype)
+    s = jnp.sum(emb, axis=1)
+    if combiner == "sum":
+        return s
+    if combiner == "mean":
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1).astype(table.dtype)
+        return s / denom
+    raise ValueError(combiner)

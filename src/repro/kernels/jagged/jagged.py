@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: jagged -> padded-dense (right-aligned) UIH batch
+materialization — the device-side hot path of training-time late
+materialization (paper §4.2).
+
+TPU mapping: the jagged values stay in HBM (pl.ANY); each grid step b DMAs the
+L-row window ending at ``offsets[b+1]`` (front-padded by the wrapper so the
+window is always in-bounds) into a VMEM scratch, masks the invalid prefix, and
+writes the (1, L, D) output block. One sequential DMA per row-block; D is
+lane-padded to 128 by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(offsets_ref, values_ref, out_ref, scratch, sem, *, max_len):
+    b = pl.program_id(0)
+    end = offsets_ref[b + 1] + max_len        # +max_len: wrapper front-pad
+    start = offsets_ref[b]
+    ln = jnp.minimum(end - max_len - start, max_len)
+    copy = pltpu.make_async_copy(
+        values_ref.at[pl.ds(end - max_len, max_len), :], scratch, sem)
+    copy.start()
+    copy.wait()
+    j = jax.lax.broadcasted_iota(jnp.int32, scratch.shape, 0)
+    valid = j >= (max_len - ln)
+    out_ref[0] = jnp.where(valid, scratch[...], jnp.zeros((), scratch.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "interpret"))
+def jagged_to_padded_kernel(
+    values_padded: jax.Array,   # (N + max_len, D): front-padded by wrapper
+    offsets: jax.Array,         # (B+1,) int32
+    max_len: int,
+    interpret: bool = False,
+) -> jax.Array:
+    bp1 = offsets.shape[0]
+    b = bp1 - 1
+    d = values_padded.shape[1]
+    kern = functools.partial(_kernel, max_len=max_len)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # offsets (scalar loads)
+            pl.BlockSpec(memory_space=pl.ANY),       # jagged values in HBM
+        ],
+        out_specs=pl.BlockSpec((1, max_len, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, max_len, d), values_padded.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((max_len, d), values_padded.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(offsets, values_padded)

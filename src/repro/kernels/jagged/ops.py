@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the jagged->padded materialization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jagged.jagged import jagged_to_padded_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def jagged_to_padded(values: jax.Array, offsets: jax.Array, max_len: int
+                     ) -> jax.Array:
+    """values (N, D) + offsets (B+1,) -> (B, max_len, D), right-aligned.
+
+    Front-pads values by max_len zero rows so the kernel's fixed-size DMA
+    window is always in-bounds; lane-pads D to a multiple of 128."""
+    n, d = values.shape
+    dp = (128 - d % 128) % 128
+    v = jnp.pad(values, ((max_len, 0), (0, dp)))
+    out = jagged_to_padded_kernel(v, offsets.astype(jnp.int32), max_len,
+                                  interpret=not _on_tpu())
+    return out[:, :, :d]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle: jagged <-> padded-dense sequence conversion (right-aligned,
+most-recent-last — the DPP featurizer contract)."""
+import jax
+import jax.numpy as jnp
+
+
+def jagged_to_padded(values: jax.Array, offsets: jax.Array, max_len: int
+                     ) -> jax.Array:
+    """values: (N, D); offsets: (B+1,) int32 row starts. Returns (B, L, D)
+    right-aligned, truncating each row to its most recent max_len entries."""
+    b = offsets.shape[0] - 1
+    d = values.shape[1]
+    if values.shape[0] == 0:
+        return jnp.zeros((b, max_len, d), values.dtype)
+    ends = offsets[1:]                                   # (B,)
+    lens = jnp.minimum(ends - offsets[:-1], max_len)     # (B,)
+    # gather index for (b, j): ends[b] - L + j, masked where j < L - len
+    j = jnp.arange(max_len)[None, :]                     # (1, L)
+    src = ends[:, None] - max_len + j                    # (B, L)
+    valid = j >= (max_len - lens[:, None])
+    src = jnp.clip(src, 0, values.shape[0] - 1)
+    out = values[src]                                    # (B, L, D)
+    return jnp.where(valid[..., None], out, jnp.zeros((), values.dtype))
+
+
+def padded_to_jagged(padded: jax.Array, offsets: jax.Array, total: int
+                     ) -> jax.Array:
+    """Inverse (for rows whose length <= L): scatter right-aligned rows back
+    into a (total, D) jagged buffer."""
+    b, l, d = padded.shape
+    ends = offsets[1:]
+    lens = jnp.minimum(ends - offsets[:-1], l)
+    j = jnp.arange(l)[None, :]
+    dst = ends[:, None] - l + j
+    valid = j >= (l - lens[:, None])
+    dst = jnp.where(valid, dst, total)                   # OOB drop slot
+    flat_dst = dst.reshape(-1)
+    flat_val = padded.reshape(-1, d)
+    out = jnp.zeros((total + 1, d), padded.dtype).at[flat_dst].add(
+        flat_val, mode="drop")
+    return out[:total]

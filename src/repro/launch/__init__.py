@@ -1,0 +1,3 @@
+"""Launch layer: production mesh, per-family sharding rules, cell builders
+(step function + input specs per arch × shape), dry-run driver, train/serve
+drivers."""

@@ -1,0 +1,29 @@
+"""Production mesh construction (defined as functions so importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; multi-pod = 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes used for batch/data parallelism (pod axis is pure DP)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def make_test_mesh(n_devices: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many local devices exist (CPU tests)."""
+    n = min(n_devices, jax.device_count())
+    return jax.make_mesh((1, n), ("data", "model"))

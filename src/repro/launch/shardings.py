@@ -1,0 +1,156 @@
+"""Parameter / optimizer-state / input PartitionSpec rules per model family.
+
+Conventions (DESIGN.md §3):
+  * LM dense weights: Megatron TP on the ``model`` axis (column-parallel in
+    projections, row-parallel out), vocab-parallel embedding/unembedding.
+  * MoE expert weights: expert dim on ``model`` + FSDP (ZeRO-3) sharding of the
+    per-expert d_ff dim over ``data`` — the shard_map entry all-gathers them
+    per layer inside the scan.
+  * Optimizer moments: parameter spec + ZeRO sharding of the first divisible
+    unsharded dim over ``data`` (ZeRO-2).
+  * RecSys embedding tables: row-sharded over ALL mesh axes.
+  * GNN: parameters replicated (tiny), edges sharded over all axes, nodes
+    replicated (vertex-cut partitioning).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import all_axes_of, data_axes_of
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# LM params
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(params_shape, mesh, moe_2d: bool = False) -> Any:
+    """Spec tree matching the transformer param pytree (stacked blocks).
+
+    ``moe_2d``: decode layout — expert weights fully sharded over
+    (model x data) so no per-step FSDP all-gather is needed."""
+
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name in ("embed", "unembed"):
+            return P("model", None)                   # vocab-parallel
+        if "blocks" not in name:
+            return P()                                # final_norm etc.
+        # stacked block leaves: leading L dim
+        if name.endswith(("ln1", "ln2", "q_norm", "k_norm", "kv_norm")):
+            return P(None, None)
+        if name.endswith(("attn/wq", "attn/wk", "attn/wv")):
+            return P(None, None, "model")             # column parallel heads
+        if name.endswith("attn/wo"):
+            return P(None, "model", None)             # row parallel
+        # MLA
+        if name.endswith(("attn/w_uk", "attn/w_uv")):
+            return P(None, None, "model")
+        if name.endswith(("attn/w_dkv", "attn/w_k_rope")):
+            return P(None, None, None)
+        # dense FFN
+        if name.endswith(("ffn/w_gate", "ffn/w_up")):
+            return P(None, None, "model")
+        if name.endswith("ffn/w_down"):
+            return P(None, "model", None)
+        # MoE
+        if name.endswith("ffn/router"):
+            return P(None, None, None)
+        if name.endswith("ffn/w_in"):                 # (L, E, d, 2f)
+            return (P(None, "model", "data", None) if moe_2d
+                    else P(None, "model", None, "data"))   # EP+2D vs EP+FSDP
+        if name.endswith("ffn/w_out"):                # (L, E, f, d)
+            return (P(None, "model", "data", None) if moe_2d
+                    else P(None, "model", None, "data"))
+        if name.endswith("ffn/shared_w_in"):
+            return P(None, None, "model")
+        if name.endswith("ffn/shared_w_out"):
+            return P(None, "model", None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO sharding of optimizer moments
+# ---------------------------------------------------------------------------
+
+def zero_shard(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Add ``data`` sharding on the first unsharded dim whose size divides."""
+    if "data" in [a for e in spec for a in (e if isinstance(e, tuple) else (e,))
+                  if e is not None]:
+        return spec
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes_of(mesh)]))
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, n) in enumerate(zip(dims, shape)):
+        if e is None and n % data_size == 0 and n >= data_size:
+            dims[i] = data_axes_of(mesh) if len(data_axes_of(mesh)) > 1 \
+                else data_axes_of(mesh)[0]
+            return P(*dims)
+    return spec
+
+
+def opt_specs(param_specs, params_shape, mesh) -> Any:
+    """AdamWState spec: step replicated; m/v ZeRO-sharded."""
+    from repro.train.optimizer import AdamWState
+
+    mv = jax.tree.map(
+        lambda s, l: zero_shard(s, l.shape, mesh), param_specs, params_shape
+    )
+    return AdamWState(step=P(), m=mv, v=jax.tree.map(lambda s: s, mv))
+
+
+# ---------------------------------------------------------------------------
+# RecSys / GNN params
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(params_shape, mesh) -> Any:
+    axes = all_axes_of(mesh)
+
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        big_table = ("table" in name or name == "embed" or
+                     name.startswith("sparse_tables"))
+        if big_table and nd == 2 and leaf.shape[0] >= 8192:
+            # rows on `model` only (replicated over data): the shard_map
+            # embedding path gathers locally + psums the reduced bag; ZeRO
+            # shards the optimizer moments over data
+            return P("model", None)
+        if "blocks" in name or "seq_blocks" in name:
+            # recsys sequence encoders are TINY (d<=128, <=4 heads): model-
+            # sharding them makes GSPMD thrash 17GB of resharding all-reduces
+            # (see EXPERIMENTS.md SPerf) — replicate instead
+            return P(*([None] * nd))
+        if nd == 2 and leaf.shape[0] * leaf.shape[1] >= (1 << 22):
+            return P(None, "model")                  # big dense MLP layers
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def gnn_param_specs(params_shape, mesh) -> Any:
+    return jax.tree.map(lambda l: P(*([None] * len(l.shape))), params_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

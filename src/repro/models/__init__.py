@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: LM transformers (GQA / MLA / MoE), MeshGraphNet,
+and recsys models (two-tower, DCN-v2, DIEN, BERT4Rec, DLRM-UIH)."""

@@ -1,0 +1,196 @@
+"""MeshGraphNet (encode-process-decode, arXiv:2010.03409) in pure JAX.
+
+Message passing uses ``jax.ops.segment_sum`` over an edge list (senders /
+receivers) — the JAX-native scatter formulation. For pod-scale meshes the edge
+arrays shard across all devices while node states stay replicated (vertex-cut
+partitioning: local partial segment-sums + one all-reduce per block).
+
+Includes a real fanout neighbor sampler for the ``minibatch_lg`` regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.embedding import mlp_apply, mlp_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3
+    aggregator: str = "sum"
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_blocks: bool = True
+
+    def param_count(self) -> int:
+        leaves = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(leaves))
+
+
+def _mlp_dims(d_in: int, d_hidden: int, n_layers: int, d_out: int):
+    return [d_in] + [d_hidden] * (n_layers - 1) + [d_out]
+
+
+def init(key, cfg: MeshGraphNetConfig) -> Params:
+    k_ne, k_ee, k_blocks, k_dec = jax.random.split(key, 4)
+    h, m = cfg.d_hidden, cfg.mlp_layers
+
+    def block_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            # edge update: MLP([e, h_src, h_dst])
+            "edge_mlp": mlp_init(k1, _mlp_dims(3 * h, h, m, h)),
+            # node update: MLP([h, agg_msgs])
+            "node_mlp": mlp_init(k2, _mlp_dims(2 * h, h, m, h)),
+            "edge_ln": jnp.ones((h,), jnp.float32),
+            "node_ln": jnp.ones((h,), jnp.float32),
+        }
+
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    return {
+        "node_encoder": mlp_init(k_ne, _mlp_dims(cfg.d_node_in, h, m, h)),
+        "edge_encoder": mlp_init(k_ee, _mlp_dims(cfg.d_edge_in, h, m, h)),
+        "blocks": jax.vmap(block_init)(block_keys),
+        "decoder": mlp_init(k_dec, _mlp_dims(h, h, m, cfg.d_out)),
+    }
+
+
+def _ln(x: jax.Array, w: jax.Array, eps=1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * w).astype(dt)
+
+
+def forward(
+    params: Params,
+    node_feats: jax.Array,    # (N, d_node_in)
+    edge_feats: jax.Array,    # (E, d_edge_in)
+    senders: jax.Array,       # (E,) int32
+    receivers: jax.Array,     # (E,) int32
+    cfg: MeshGraphNetConfig,
+    edge_mask: Optional[jax.Array] = None,   # (E,) for padded edges
+) -> jax.Array:
+    dt = cfg.compute_dtype
+    n = node_feats.shape[0]
+    m = cfg.mlp_layers
+    h = mlp_apply(params["node_encoder"], node_feats.astype(dt), m)
+    e = mlp_apply(params["edge_encoder"], edge_feats.astype(dt), m)
+    if edge_mask is not None:
+        e = e * edge_mask[:, None].astype(dt)
+
+    def block(carry, bp):
+        h, e = carry
+        msg_in = jnp.concatenate([e, h[senders], h[receivers]], axis=-1)
+        e_new = mlp_apply(bp["edge_mlp"], msg_in, m)
+        if edge_mask is not None:
+            e_new = e_new * edge_mask[:, None].astype(dt)
+        e = _ln(e + e_new, bp["edge_ln"])
+        agg = jax.ops.segment_sum(e, receivers, num_segments=n)
+        h_new = mlp_apply(bp["node_mlp"], jnp.concatenate([h, agg], -1), m)
+        h = _ln(h + h_new, bp["node_ln"])
+        return (h, e), None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    if cfg.scan_blocks:
+        (h, e), _ = jax.lax.scan(blk, (h, e), params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda x: x[i], params["blocks"])
+            (h, e), _ = blk((h, e), bp)
+    return mlp_apply(params["decoder"], h, m)
+
+
+def loss_fn(params, node_feats, edge_feats, senders, receivers, targets,
+            cfg: MeshGraphNetConfig, node_mask=None, edge_mask=None) -> jax.Array:
+    pred = forward(params, node_feats, edge_feats, senders, receivers, cfg,
+                   edge_mask)
+    err = (pred.astype(jnp.float32) - targets.astype(jnp.float32)) ** 2
+    if node_mask is not None:
+        err = err * node_mask[:, None]
+        return jnp.sum(err) / (jnp.maximum(jnp.sum(node_mask), 1) * cfg.d_out)
+    return jnp.mean(err)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor sampler (host-side, for minibatch_lg): fanout-(f1, f2) sampling
+# ---------------------------------------------------------------------------
+
+class CSRGraph:
+    """Host-side CSR adjacency for sampling."""
+
+    def __init__(self, n_nodes: int, senders: np.ndarray, receivers: np.ndarray):
+        self.n_nodes = n_nodes
+        order = np.argsort(receivers, kind="stable")
+        self.src_sorted = senders[order]
+        self.indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        counts = np.bincount(receivers, minlength=n_nodes)
+        np.cumsum(counts, out=self.indptr[1:])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.src_sorted[self.indptr[v] : self.indptr[v + 1]]
+
+
+def sample_subgraph(
+    graph: CSRGraph,
+    seeds: np.ndarray,
+    fanouts: Tuple[int, ...],
+    rng: np.random.Generator,
+) -> Dict[str, np.ndarray]:
+    """GraphSAGE-style fixed-fanout sampling producing FIXED-SHAPE padded
+    arrays (jit-stable): layer l samples ``fanouts[l]`` in-neighbors per
+    frontier slot, so hop l contributes exactly batch * prod(fanouts[:l+1])
+    edges; empty slots are masked out. Frontier slots keep duplicates — shape
+    stability is what lets every minibatch reuse one compiled step."""
+    frontier = seeds.astype(np.int64)
+    frontier_mask = np.ones(len(frontier), dtype=bool)
+    all_src, all_dst, all_mask = [], [], []
+    for f in fanouts:
+        n_f = len(frontier)
+        src = np.zeros((n_f, f), dtype=np.int64)
+        msk = np.zeros((n_f, f), dtype=bool)
+        for i, v in enumerate(frontier):
+            if not frontier_mask[i]:
+                continue
+            nbr = graph.neighbors(int(v))
+            if len(nbr) == 0:
+                continue
+            take = rng.choice(nbr, size=f, replace=len(nbr) < f)
+            src[i] = take
+            msk[i] = True
+        all_src.append(np.where(msk.reshape(-1), src.reshape(-1), 0))
+        all_dst.append(np.repeat(frontier, f))
+        all_mask.append(msk.reshape(-1))
+        frontier = src.reshape(-1)
+        frontier_mask = msk.reshape(-1)
+
+    senders = np.concatenate(all_src)
+    receivers = np.concatenate(all_dst)
+    edge_mask = np.concatenate(all_mask)
+    # compact node ids
+    nodes, inv = np.unique(np.concatenate([senders, receivers, seeds]),
+                           return_inverse=True)
+    senders_c = inv[: len(senders)]
+    receivers_c = inv[len(senders) : 2 * len(senders)]
+    seed_local = inv[2 * len(senders):]
+    return {
+        "nodes": nodes,
+        "senders": senders_c.astype(np.int32),
+        "receivers": receivers_c.astype(np.int32),
+        "edge_mask": edge_mask,
+        "seed_local": seed_local.astype(np.int32),
+    }

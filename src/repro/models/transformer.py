@@ -1,0 +1,319 @@
+"""Decoder-only transformer LM (GQA / MLA attention, dense / MoE FFN).
+
+Layer parameters are *stacked* along a leading layer axis and the blocks run
+under ``jax.lax.scan`` (+ optional remat), keeping the HLO size independent of
+depth — essential for 512-device dry-run compiles. Cross-entropy is computed
+in sequence chunks so (B, S, vocab) logits are never fully materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    attention: str = "gqa"           # "gqa" | "mla"
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None  # None = dense FFN
+    # MLA geometry (attention == "mla")
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # execution
+    compute_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    loss_chunk: int = 512
+    remat: bool = True
+    scan_layers: bool = True
+    unroll_scans: bool = False
+
+    @property
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            q_chunk=self.q_chunk, unroll=self.unroll_scans,
+        )
+
+    @property
+    def mla_cfg(self) -> L.MLAConfig:
+        return L.MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            kv_lora_rank=self.kv_lora_rank, qk_nope_dim=self.qk_nope_dim,
+            qk_rope_dim=self.qk_rope_dim, v_head_dim=self.v_head_dim,
+            rope_theta=self.rope_theta, q_chunk=self.q_chunk,
+            unroll=self.unroll_scans,
+        )
+
+    def param_count(self) -> int:
+        leaves = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(leaves))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts count)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        expert_p = self.n_layers * (
+            self.moe.n_experts * (3 * self.d_model * self.moe.d_ff)
+        )
+        active_expert_p = expert_p * k // e
+        return total - expert_p + active_expert_p
+
+
+def _init_block(key, cfg: TransformerConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    if cfg.attention == "mla":
+        attn = L.init_mla(k1, cfg.mla_cfg)
+    else:
+        attn = L.init_gqa(k1, cfg.attn_cfg)
+    if cfg.moe is not None:
+        ffn = init_moe(k2, cfg.d_model, cfg.moe)
+    else:
+        ffn = L.init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init(key, cfg: TransformerConfig) -> Params:
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)  # stacked (L, ...)
+    return {
+        "embed": L._init(k_emb, (cfg.vocab, cfg.d_model), scale=0.02),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": L._init(k_out, (cfg.vocab, cfg.d_model), scale=0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(cfg: TransformerConfig, mesh, data_axes, h, block, positions):
+    hn = L.rms_norm(h, block["ln1"])
+    if cfg.attention == "mla":
+        attn_out = L.mla_attention_train(block["attn"], hn, positions, cfg.mla_cfg)
+    else:
+        attn_out = L.gqa_attention(block["attn"], hn, positions, cfg.attn_cfg)
+    h = h + attn_out
+    hn = L.rms_norm(h, block["ln2"])
+    if cfg.moe is not None:
+        ffn_out = moe_ffn(block["ffn"], hn, cfg.moe, mesh=mesh,
+                          data_axes=data_axes)
+    else:
+        ffn_out = L.swiglu(block["ffn"], hn)
+    return h + ffn_out
+
+
+def hidden_states(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+                  mesh=None, data_axes=("data",)) -> jax.Array:
+    b, s = tokens.shape
+    dt = cfg.compute_dtype
+    h = params["embed"].astype(dt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    body = partial(_block_fwd, cfg, mesh, data_axes)
+    if cfg.remat:
+        body = jax.checkpoint(body, static_argnums=())
+    if cfg.scan_layers:
+        def scan_fn(carry, block):
+            return body(carry, block, positions), None
+        h, _ = jax.lax.scan(scan_fn, h, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            block = jax.tree.map(lambda x: x[i], params["blocks"])
+            h = body(h, block, positions)
+    return L.rms_norm(h, params["final_norm"])
+
+
+def loss_fn(params: Params, tokens: jax.Array, targets: jax.Array,
+            cfg: TransformerConfig, mesh=None, data_axes=("data",)) -> jax.Array:
+    """Mean next-token cross-entropy; vocab projection in sequence chunks."""
+    h = hidden_states(params, tokens, cfg, mesh, data_axes)  # (B, S, D)
+    b, s, d = h.shape
+    dt = cfg.compute_dtype
+    unemb = params["unembed"].astype(dt)
+    lc = min(cfg.loss_chunk, s)
+    n_chunks = s // lc if s % lc == 0 else -1
+    if n_chunks == -1:                                    # ragged: no chunking
+        logits = h @ unemb.T
+        return _xent(logits, targets)
+    hs = h.reshape(b, n_chunks, lc, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, n_chunks, lc).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hi, ti = inp
+        logits = hi @ unemb.T                             # (B, lc, V)
+        return carry + _xent_sum(logits, ti), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hs, ts),
+                            unroll=cfg.unroll_scans)
+    return total / (b * s)
+
+
+def _xent_sum(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    return _xent_sum(logits, targets) / targets.size
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> Dict[str, jax.Array]:
+    dt = dtype or cfg.compute_dtype
+    nl = cfg.n_layers
+    if cfg.attention == "mla":
+        return {
+            "c_kv": jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank), dt),
+            "k_pe": jnp.zeros((nl, batch, max_len, cfg.qk_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            mesh=None, data_axes=("data",)
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Process a full prompt; return last-position logits + a populated cache.
+
+    The cache is captured layer-by-layer inside the scan (stacked (L, ...))."""
+    b, s = tokens.shape
+    dt = cfg.compute_dtype
+    h = params["embed"].astype(dt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(h, block):
+        hn = L.rms_norm(h, block["ln1"])
+        if cfg.attention == "mla":
+            c_kv, k_pe = L.mla_new_cache_entries(block["attn"], hn, positions,
+                                                 cfg.mla_cfg)
+            attn_out = L.mla_attention_train(block["attn"], hn, positions,
+                                             cfg.mla_cfg)
+            cache = {"c_kv": c_kv, "k_pe": k_pe}
+        else:
+            q, k, v = L._qkv(block["attn"], hn, positions, cfg.attn_cfg)
+            out = L._attend_chunked(q, k, v, positions, positions, None, True,
+                                    cfg.q_chunk, cfg.unroll_scans)
+            attn_out = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ \
+                block["attn"]["wo"].astype(dt)
+            cache = {"k": k, "v": v}
+        h = h + attn_out
+        hn = L.rms_norm(h, block["ln2"])
+        if cfg.moe is not None:
+            h = h + moe_ffn(block["ffn"], hn, cfg.moe, mesh=mesh,
+                            data_axes=data_axes)
+        else:
+            h = h + L.swiglu(block["ffn"], hn)
+        return h, cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, caches = jax.lax.scan(body, h, params["blocks"])
+    else:
+        cache_list = []
+        for i in range(cfg.n_layers):
+            block = jax.tree.map(lambda x: x[i], params["blocks"])
+            h, c = body(h, block)
+            cache_list.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = h[:, -1, :] @ params["unembed"].astype(dt).T
+    return logits, caches
+
+
+def decode_step(params: Params, cache: Dict[str, jax.Array],
+                next_token: jax.Array,   # (B,) int32
+                position: jax.Array,     # (B,) current position to write
+                cfg: TransformerConfig,
+                mesh=None, data_axes=("data",)
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One token of autoregressive decode against a (large) KV cache."""
+    b = next_token.shape[0]
+    dt = cfg.compute_dtype
+    h = params["embed"].astype(dt)[next_token][:, None, :]  # (B, 1, D)
+    pos = position[:, None]
+
+    def body(h, inp):
+        block, layer_cache = inp
+        hn = L.rms_norm(h, block["ln1"])
+        if cfg.attention == "mla":
+            c_new, pe_new = L.mla_new_cache_entries(block["attn"], hn, pos,
+                                                    cfg.mla_cfg)
+
+            def upd(cachearr, entry, p):
+                return jax.lax.dynamic_update_slice_in_dim(cachearr, entry, p, 0)
+
+            c_kv = jax.vmap(upd)(layer_cache["c_kv"], c_new, position)
+            k_pe = jax.vmap(upd)(layer_cache["k_pe"], pe_new, position)
+            skv = c_kv.shape[1]
+            kv_mask = jnp.arange(skv)[None, :] <= pos
+            attn_out = L.mla_attention_decode(block["attn"], hn, pos, c_kv,
+                                              k_pe, kv_mask, cfg.mla_cfg)
+            new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+        else:
+            attn_out, k_c, v_c = L.gqa_decode(block["attn"], hn, pos,
+                                              layer_cache["k"],
+                                              layer_cache["v"], cfg.attn_cfg)
+            new_cache = {"k": k_c, "v": v_c}
+        h = h + attn_out
+        hn = L.rms_norm(h, block["ln2"])
+        if cfg.moe is not None:
+            h = h + moe_ffn(block["ffn"], hn, cfg.moe, mesh=mesh,
+                            data_axes=data_axes)
+        else:
+            h = h + L.swiglu(block["ffn"], hn)
+        return h, new_cache
+
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    else:
+        cache_list = []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda x: x[i], params["blocks"])
+            lc = jax.tree.map(lambda x: x[i], cache)
+            h, c = body(h, (blk, lc))
+            cache_list.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = h[:, 0, :] @ params["unembed"].astype(dt).T
+    return logits, new_cache

@@ -1,0 +1,2 @@
+"""Roofline analysis: 3-term model (compute / HBM / ICI) from compiled
+dry-run artifacts."""

@@ -1,0 +1,98 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = link_bytes_per_chip / 50e9 B/s ICI per link
+
+``cost_analysis()`` on a compiled SPMD executable reports per-device flops
+and bytes; the collective term comes from the HLO parser. The dominant term is
+the bottleneck; roofline fraction = model_flops-derived ideal time / dominant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    link_bytes_per_chip: float
+    model_flops_total: float
+    collective_counts: Dict[str, int]
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.link_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops — how much compiled compute is useful
+        (catches remat/redundancy waste)."""
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / max(total_hlo, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Ideal (useful-flops-limited) time / bound time."""
+        t_ideal = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return t_ideal / max(self.t_bound, 1e-30)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "link_bytes_per_chip": self.link_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_ratio": self.model_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  cost: Optional[Dict[str, float]],
+                  link_bytes: float, collective_counts: Dict[str, int],
+                  model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    nbytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=nbytes,
+        link_bytes_per_chip=link_bytes,
+        model_flops_total=model_flops,
+        collective_counts=collective_counts,
+    )

@@ -1,0 +1,92 @@
+"""Collective-byte accounting from post-SPMD optimized HLO text.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes link bytes per chip according to the standard
+ring-algorithm cost model:
+
+  all-gather       out_bytes * (n-1)/n
+  reduce-scatter   out_bytes * (n-1)          (input = n * output per device)
+  all-reduce       2 * bytes * (n-1)/n
+  all-to-all       bytes * (n-1)/n
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(?P<result>\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]     # sum of per-device result sizes
+    link_bytes: float                # ring-model bytes over ICI per chip
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    result_bytes: Dict[str, int] = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:   # count -start once, skip -done
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("result"))
+        # group size n
+        n = 0
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        n = max(n, 2)
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0) + nbytes
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            link += 2.0 * nbytes * frac
+        elif op == "all-gather":
+            link += nbytes * frac
+        elif op == "reduce-scatter":
+            link += nbytes * (n - 1)
+        elif op == "all-to-all":
+            link += nbytes * frac
+        else:  # collective-permute
+            link += nbytes
+    return CollectiveStats(counts, result_bytes, link)

@@ -1,0 +1,83 @@
+"""Real-time mutable UIH store (paper §4.1.1).
+
+Captures the most recent engagements with second-level freshness. To support
+high-frequency updates without a Read-Modify-Write penalty, writes are
+*blind-write appends* (unsorted chunks per user); state resolution (sort +
+merge) is deferred to read time or to background compaction. A write-through
+cache co-located with the ranking service serves the read path.
+
+Retention is coupled to the immutable store's compaction cadence: events must
+stay in the mutable tier until the next compaction cycle has consolidated them
+into the immutable tier (``evict_until``)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import events as ev
+
+
+class MutableUIHStore:
+    def __init__(self, schema: Optional[ev.TraitSchema] = None):
+        self.schema = schema or ev.default_schema()
+        self._chunks: Dict[int, List[ev.EventBatch]] = {}
+        # write-through cache of the merged view, invalidated on append
+        self._cache: Dict[int, ev.EventBatch] = {}
+        # accounting for benchmarks
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.appends = 0
+
+    # -- write path ---------------------------------------------------------
+    def append(self, user_id: int, batch: ev.EventBatch) -> None:
+        """Blind-write append: no read, no sort, O(1) amortized."""
+        if ev.batch_len(batch) == 0:
+            return
+        self._chunks.setdefault(user_id, []).append(batch)
+        self._cache.pop(user_id, None)
+        self.appends += 1
+        self.bytes_written += sum(v.nbytes for v in batch.values())
+
+    # -- read path ----------------------------------------------------------
+    def read(self, user_id: int, t_lo: int, t_hi: int) -> ev.EventBatch:
+        """Merged, time-ordered view of recent events in (t_lo, t_hi].
+
+        Merge-on-read resolves the unsorted blind-write chunks; the merged view
+        is cached (write-through cache) until the next append."""
+        merged = self._cache.get(user_id)
+        if merged is None:
+            merged = ev.merge_sorted(self._chunks.get(user_id, []))
+            if not merged:
+                merged = ev.empty_batch(self.schema)
+            self._cache[user_id] = merged
+        out = ev.time_slice(merged, t_lo + 1, t_hi)
+        self.bytes_read += sum(v.nbytes for v in out.values())
+        return out
+
+    # -- retention ----------------------------------------------------------
+    def evict_until(self, user_id: int, watermark_ts: int) -> None:
+        """Drop events with timestamp <= watermark (already compacted into the
+        immutable tier). Called after each compaction cycle."""
+        chunks = self._chunks.get(user_id)
+        if not chunks:
+            return
+        merged = ev.merge_sorted(chunks)
+        ts = merged["timestamp"]
+        keep_from = int(np.searchsorted(ts, watermark_ts, side="right"))
+        kept = ev.slice_batch(merged, keep_from, len(ts))
+        if ev.batch_len(kept) == 0:
+            self._chunks.pop(user_id, None)
+        else:
+            self._chunks[user_id] = [kept]
+        self._cache.pop(user_id, None)
+
+    def evict_all_until(self, watermark_ts: int) -> None:
+        for uid in list(self._chunks.keys()):
+            self.evict_until(uid, watermark_ts)
+
+    def user_ids(self):
+        return list(self._chunks.keys())
+
+    def resident_events(self, user_id: int) -> int:
+        return sum(ev.batch_len(c) for c in self._chunks.get(user_id, []))

@@ -1,0 +1,34 @@
+"""Symmetric hash partitioning (paper §4.2.3).
+
+The primary training data and the immutable UIH store use the *identical* hash
+partitioning scheme with a shared partition key (user_id), so that all UIH
+lookups issued while loading one data batch map to the same storage shard —
+eliminating cross-shard network fanout on the high-concurrency read path.
+"""
+from __future__ import annotations
+
+import zlib
+
+
+def shard_of(user_id: int, n_shards: int) -> int:
+    """Deterministic, stable hash partition. Shared by trainer-data placement
+    and by the immutable store so sharding stays *symmetric*."""
+    # splitmix64-style mix; stable across processes (unlike hash()).
+    x = (user_id & 0xFFFFFFFFFFFFFFFF) * 0x9E3779B97F4A7C15 & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 32
+    x = x * 0xBF58476D1CE4E5B9 & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 29
+    return int(x % n_shards)
+
+
+class ShardRouter:
+    def __init__(self, n_shards: int):
+        assert n_shards >= 1
+        self.n_shards = n_shards
+
+    def route(self, user_id: int) -> int:
+        return shard_of(user_id, self.n_shards)
+
+    def fanout(self, user_ids) -> int:
+        """Number of distinct shards touched by a batch of lookups."""
+        return len({self.route(int(u)) for u in user_ids})

@@ -1,0 +1,2 @@
+"""Training substrate: AdamW, LR schedules, microbatch accumulation,
+gradient compression, distributed train step."""

@@ -1,0 +1,59 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound all-reduce at pod scale).
+
+Each leaf is quantized to int8 with a per-leaf max-abs scale before the
+(logical) all-reduce; the quantization residual is carried in an error-feedback
+buffer and added to the next step's gradient, making the compression unbiased
+over time (EF-SGD/1-bit-Adam family). Wire-format bytes drop 4x vs fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any     # pytree like grads (fp32)
+
+
+def ef_init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, state: EFState) -> Tuple[Any, EFState]:
+    """Returns (decompressed grads as the optimizer sees them, new EF state)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq, g32 - deq
+
+    flat = jax.tree.map(one, grads, state.residual)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, EFState(residual=res)
+
+
+def wire_bytes(grads, compressed: bool) -> int:
+    """Bytes a pod-level all-reduce moves per step (for the benchmarks)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = int(jnp.size(g))
+        total += n * (1 if compressed else 4) + (4 if compressed else 0)
+    return total

@@ -1,0 +1,108 @@
+"""AdamW + schedules as pure pytree transforms (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Any                   # pytree like params
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params, grads, state: AdamWState, cfg: AdamWConfig,
+    decay_mask: Optional[Any] = None,
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_, wd_on):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * wd_on * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    if decay_mask is None:
+        # decay matrices only (ndim >= 2), not norms/biases — standard practice
+        decay_mask = jax.tree.map(lambda p: jnp.float32(p.ndim >= 2), params)
+    new_params = jax.tree.map(upd, params, m, v, decay_mask)
+    return new_params, AdamWState(step=step, m=m, v=v), {
+        "grad_norm": gnorm, "lr": lr,
+    }
+
+
+def make_train_step(
+    loss_fn: Callable[..., jax.Array],
+    cfg: AdamWConfig,
+    compress: Optional[Callable] = None,
+):
+    """Generic train step: value_and_grad + optional gradient compression +
+    AdamW. ``loss_fn(params, batch) -> scalar``."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state, stats = adamw_update(params, grads, opt_state, cfg)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
