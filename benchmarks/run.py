@@ -13,6 +13,7 @@ MODULES = [
     "benchmarks.table1_system_efficiency",
     "benchmarks.bench_prefetch",
     "benchmarks.bench_affinity",
+    "benchmarks.bench_scan_plan",
     "benchmarks.bench_rebatch",
     "benchmarks.bench_kernels",
     "benchmarks.fig4_ne_scaling",

@@ -93,6 +93,9 @@ def _batch_replay(sim, tenant) -> Dict[str, float]:
                 worker.process(batch)
                 n_batches += 1
     d = sim.immutable.stats.delta(before)
+    # bytes_decoded credits the store's stripe-decode LRU (the §4.2.3 block
+    # cache, on by default) — that is part of the system under test; the Fat
+    # Row path decodes its own payload per example and has nothing cacheable
     total_t = (primary_bytes / BW_PRIMARY
                + d.batched_requests * SCAN_OVERHEAD_S
                + d.bytes_scanned / BW_LOOKUP

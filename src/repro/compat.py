@@ -1,0 +1,71 @@
+"""Version-portability shims for the jax API surface this repo uses.
+
+The repo targets the modern jax API (``jax.set_mesh``, ``jax.shard_map``);
+these helpers fall back to the older spellings so the same code runs on
+jax 0.4.x (``jax.experimental.shard_map``, ``with mesh:``) through current
+releases without scattering version checks across call sites.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def set_mesh(mesh: "jax.sharding.Mesh"):
+    """Context manager installing ``mesh`` as the ambient mesh so ``jax.jit``
+    accepts bare ``PartitionSpec`` shardings.
+
+      * jax >= 0.6:   ``jax.set_mesh(mesh)``
+      * jax ~= 0.5:   ``jax.sharding.use_mesh(mesh)``
+      * jax <= 0.4.x: the legacy ``with mesh:`` context manager
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+
+    @contextlib.contextmanager
+    def _legacy():
+        with mesh:
+            yield mesh
+
+    return _legacy()
+
+
+def as_shardings(mesh: "jax.sharding.Mesh", tree):
+    """Make a ``PartitionSpec`` pytree acceptable to ``jax.jit`` shardings.
+
+    Modern jax resolves bare specs against the ambient mesh (``set_mesh``);
+    jax <= 0.4.x requires concrete ``Sharding`` objects, so spec leaves are
+    wrapped into ``NamedSharding(mesh, spec)`` there. Non-spec leaves (already
+    shardings, or ``None`` subtrees) pass through untouched.
+    """
+    if hasattr(jax, "set_mesh"):
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree_util.tree_map(
+        lambda leaf: (NamedSharding(mesh, leaf)
+                      if isinstance(leaf, PartitionSpec) else leaf),
+        tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` when present, else ``jax.experimental.shard_map``.
+
+    The old API calls the replication-checking flag ``check_rep``; the new one
+    calls it ``check_vma``. Pass ``check_vma`` and it is translated.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -65,14 +65,20 @@ def audit(
     materializer: Materializer,
     schema: ev.TraitSchema,
     projection: Optional[TenantProjection] = None,
+    batched: bool = False,
 ) -> AuditReport:
     """Compare training-time materialization against inference-time ground truth.
 
     ``references[i]`` must be the complete UIH the ranking model saw for
-    ``examples[i]`` at T_request (captured via ``BaseSnapshotter.inference_uih``)."""
+    ``examples[i]`` at T_request (captured via ``BaseSnapshotter.inference_uih``).
+    With ``batched=True`` the planned ``materialize_batch`` path is audited
+    instead of per-example ``materialize`` — both must stay O2O-clean."""
     report = AuditReport()
-    for exm, ref in zip(examples, references):
-        got = materializer.materialize(exm, projection)
+    if batched:
+        outputs = materializer.materialize_batch(examples, projection)
+    else:
+        outputs = (materializer.materialize(e, projection) for e in examples)
+    for (exm, ref), got in zip(zip(examples, references), outputs):
         want = project_reference(ref, projection, schema)
         report.examples += 1
         if not batches_equal(got, want):

@@ -11,18 +11,50 @@ Given a logged training example, the materializer:
 
 The logic depends only on the logged metadata, never on the training paradigm,
 so streaming and batch training share it unchanged (§3.2).
+
+Batch materialization is *planned* (§4.1.2, §4.2.3): ``materialize_batch``
+groups the batch's examples by *window key* — ``(user_id, end_ts, seq_len,
+checksum, generation, projection)`` pins the immutable window's exact content
+even when per-request lookback ``start_ts`` differs — canonicalizes each
+group's scan bounds, and issues ONE ``multi_range_scan`` covering every
+example × feature group. The store's planner dedupes the canonicalized
+duplicates (surfaced as ``IOStats.dedup_hits``), executes shard groups in
+parallel, and decodes each stripe at most once; the materializer then
+reassembles per-example UIHs from the shared windows. A true-LRU window cache
+(hits promoted) persists windows ACROSS batches, the DPP-worker analogue of
+the store-side block cache — all of a user's same-day requests share one
+immutable window, so streaming and user-bucketed batch jobs both hit heavily.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import events as ev
 from repro.core.projection import TenantProjection
 from repro.core.versioning import TrainingExample, window_checksum
-from repro.storage.immutable_store import ImmutableUIHStore, ScanRequest
+from repro.storage.immutable_store import ImmutableUIHStore, IOStats, ScanRequest
+
+
+def _projection_fingerprint(projection: Optional[TenantProjection]):
+    """Hashable identity of a projection's *content* for window-cache keys.
+
+    The cache persists across batches, so ``id(projection)`` is unsafe: a
+    garbage-collected projection's id can be reused by a different one and
+    serve a stale window. TenantProjection itself may hold a dict
+    (``traits_per_group``), so it is not reliably hashable — fingerprint the
+    fields that affect the fetched window instead."""
+    if projection is None:
+        return None
+    tp = projection.traits_per_group
+    return (
+        projection.seq_len,
+        tuple(projection.feature_groups),
+        tuple(sorted((g, tuple(ts)) for g, ts in tp.items())) if tp else None,
+    )
 
 
 class ChecksumMismatch(RuntimeError):
@@ -41,6 +73,8 @@ class MaterializeStats:
     checksum_failures: int = 0
     immutable_events: int = 0
     mutable_events: int = 0
+    window_cache_hits: int = 0   # cross-batch LRU hits (no store round-trip)
+    windows_fetched: int = 0     # unique windows fetched from the store
 
 
 class Materializer:
@@ -57,12 +91,16 @@ class Materializer:
         self.validate_checksum = validate_checksum
         self.strict = strict
         self.stats = MaterializeStats()
-        # LRU cache of immutable windows persisting ACROSS batches (the DPP
-        # worker analogue of the store-side block cache, §4.2.3): all of a
-        # user's same-day requests share one immutable window, so streaming
-        # and user-bucketed batch jobs both hit heavily.
+        # THIS materializer's store traffic. The store's own ``stats`` is
+        # shared by every client, so concurrent workers cannot attribute
+        # snapshot/delta windows of it to their own lookups; the store
+        # accumulates each call's delta here instead.
+        self.io_stats = IOStats()
+        # True-LRU cache of immutable windows persisting ACROSS batches (the
+        # DPP worker analogue of the store-side block cache, §4.2.3): hits are
+        # promoted, so a hot user's window survives colder evictions.
         self.window_cache_size = window_cache_size
-        self._window_cache: "dict" = {}
+        self._window_cache: "OrderedDict" = OrderedDict()
 
     # -- single example -------------------------------------------------------
     def materialize(
@@ -74,47 +112,13 @@ class Materializer:
             # Fat Row path: UIH is already materialized; apply projection only.
             return self._project_fat(example, projection)
 
-        meta = example.version
-        assert meta is not None, "VLM example missing version metadata"
+        assert example.version is not None, "VLM example missing version metadata"
         mutable_part = example.mutable_uih or ev.empty_batch(self.schema)
-        n_mut = ev.batch_len(mutable_part)
-
-        groups = (
-            projection.feature_groups
-            if projection is not None
-            else tuple(self.schema.feature_groups)
-        )
-        # Sequence-length projection: the tenant wants the *most recent*
-        # projection.seq_len events of the full UIH. The immutable fetch uses
-        # the full tenant budget (not seq_len - n_mut) so the fetched window is
-        # shareable across same-user examples whose mutable slices differ; the
-        # final concat+trim keeps exactly seq_len events.
-        max_events = -1
-        if projection is not None:
-            max_events = projection.seq_len
-
-        full_fetch = self._wants_full_window(projection, meta.seq_len, max_events)
-        reqs = [
-            ScanRequest(
-                user_id=example.user_id,
-                group=g,
-                start_ts=meta.start_ts,
-                end_ts=meta.end_ts,
-                max_events=meta.seq_len if max_events < 0 else max_events,
-                traits=None if projection is None else projection.traits_for(self.schema, g),
-            )
-            for g in groups
-        ]
-        parts = self.immutable.multi_range_scan(reqs)
-        immutable_part = self._join_groups(parts)
-
-        if self.validate_checksum and meta.checksum and full_fetch:
-            self._check(example, immutable_part, meta)
-
+        immutable_part = self._fetch_immutable(example, projection)
         out = self._concat_and_project(immutable_part, mutable_part, projection)
         self.stats.examples += 1
         self.stats.immutable_events += ev.batch_len(immutable_part)
-        self.stats.mutable_events += n_mut
+        self.stats.mutable_events += ev.batch_len(mutable_part)
         return out
 
     def materialize_batch(
@@ -122,48 +126,104 @@ class Materializer:
         examples: Sequence[TrainingExample],
         projection: Optional[TenantProjection] = None,
     ) -> List[ev.EventBatch]:
-        """Batch path with **data-affinity amortization** (paper §4.2.3): when
-        temporally-adjacent examples of the same user share an identical
-        immutable window (same version metadata), the range scan is issued once
-        and shared across the batch."""
-        cache = {}
+        """Planned batch path with **data-affinity amortization** (§4.2.3).
+
+        Examples are grouped by window key (same watermark + length + checksum
+        => identical immutable event set, even when the lookback ``start_ts``
+        differs slightly between adjacent requests). Each group's scan bounds
+        are canonicalized to its first example's, and ONE ``multi_range_scan``
+        covering every example × feature group goes to the store, whose planner
+        dedupes the duplicates and executes shard groups in parallel. Windows
+        are then reassembled per example.
+        """
         out: List[Optional[ev.EventBatch]] = [None] * len(examples)
+        # 1) group VLM examples by window key (batch-local dedupe scope)
+        members: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, ex in enumerate(examples):
             if ex.is_fat or ex.version is None:
                 out[i] = self.materialize(ex, projection)
                 continue
-            # key pins the *content* of the immutable window: same watermark +
-            # same length + same checksum => identical event set, even when the
-            # lookback start_ts differs slightly between adjacent requests
-            key = (
-                ex.user_id,
-                ex.version.end_ts,
-                ex.version.seq_len,
-                ex.version.checksum,
-                ex.version.generation,
-                id(projection),
-            )
-            imm = cache.get(key)
-            if imm is None and self.window_cache_size:
-                imm = self._window_cache.get(key)
-            if imm is None:
-                imm = self._fetch_immutable(ex, projection)
-                cache[key] = imm
-                if self.window_cache_size:
-                    self._window_cache[key] = imm
-                    while len(self._window_cache) > self.window_cache_size:
-                        self._window_cache.pop(next(iter(self._window_cache)))
-            mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
-            out[i] = self._concat_and_project(imm, mutable_part, projection)
-            self.stats.examples += 1
-            self.stats.immutable_events += ev.batch_len(imm)
-            self.stats.mutable_events += ev.batch_len(mutable_part)
+            members.setdefault(self._window_key(ex, projection), []).append(i)
+
+        # 2) resolve each unique window: cross-batch LRU first, else collect
+        #    canonicalized requests for one planned store round-trip
+        windows: dict = {}
+        reqs: List[ScanRequest] = []
+        fetch_spans: List[Tuple[tuple, TrainingExample, int, int]] = []
+        for key, idxs in members.items():
+            cached = self._window_cache_get(key)
+            if cached is not None:
+                self.stats.window_cache_hits += 1
+                windows[key] = cached
+                continue
+            rep = examples[idxs[0]]
+            canonical = self._requests_for(rep, projection)
+            lo = len(reqs)
+            # one canonicalized request tuple PER member example: the plan
+            # covers example × group and the store dedupes (IOStats.dedup_hits)
+            for _ in idxs:
+                reqs.extend(canonical)
+            fetch_spans.append((key, rep, lo, lo + len(canonical)))
+
+        # 3) single store round-trip for all missing windows
+        if reqs:
+            parts = self.immutable.multi_range_scan(reqs, self.io_stats)
+            for key, rep, lo, hi in fetch_spans:
+                imm = self._join_groups(parts[lo:hi])
+                self._maybe_check(rep, imm, projection)
+                self.stats.windows_fetched += 1
+                windows[key] = imm
+                self._window_cache_put(key, imm)
+
+        # 4) reassemble per-example UIHs from the shared windows
+        for key, idxs in members.items():
+            imm = windows[key]
+            for i in idxs:
+                ex = examples[i]
+                mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
+                out[i] = self._concat_and_project(imm, mutable_part, projection)
+                self.stats.examples += 1
+                self.stats.immutable_events += ev.batch_len(imm)
+                self.stats.mutable_events += ev.batch_len(mutable_part)
         return out  # type: ignore[return-value]
 
     # -- helpers ---------------------------------------------------------------
-    def _fetch_immutable(
+    def _window_key(
         self, example: TrainingExample, projection: Optional[TenantProjection]
-    ) -> ev.EventBatch:
+    ) -> tuple:
+        """Pins the *content* of an immutable window: same watermark + same
+        length + same checksum => identical event set regardless of the
+        per-request lookback start_ts."""
+        v = example.version
+        return (example.user_id, v.end_ts, v.seq_len, v.checksum, v.generation,
+                _projection_fingerprint(projection))
+
+    def _window_cache_get(self, key: tuple) -> Optional[ev.EventBatch]:
+        if not self.window_cache_size:
+            return None
+        hit = self._window_cache.get(key)
+        if hit is not None:
+            self._window_cache.move_to_end(key)  # true LRU: promote on hit
+        return hit
+
+    def _window_cache_put(self, key: tuple, imm: ev.EventBatch) -> None:
+        if not self.window_cache_size:
+            return
+        self._window_cache[key] = imm
+        self._window_cache.move_to_end(key)
+        while len(self._window_cache) > self.window_cache_size:
+            self._window_cache.popitem(last=False)
+
+    def _requests_for(
+        self, example: TrainingExample, projection: Optional[TenantProjection]
+    ) -> List[ScanRequest]:
+        """One ScanRequest per feature group for the example's window.
+
+        Sequence-length projection: the tenant wants the *most recent*
+        ``projection.seq_len`` events of the full UIH. The immutable fetch uses
+        the full tenant budget (not seq_len - n_mutable) so the fetched window
+        is shareable across same-user examples whose mutable slices differ;
+        the final concat+trim keeps exactly seq_len events."""
         meta = example.version
         assert meta is not None
         groups = (
@@ -172,7 +232,7 @@ class Materializer:
             else tuple(self.schema.feature_groups)
         )
         max_events = -1 if projection is None else projection.seq_len
-        reqs = [
+        return [
             ScanRequest(
                 user_id=example.user_id,
                 group=g,
@@ -183,12 +243,31 @@ class Materializer:
             )
             for g in groups
         ]
-        parts = self.immutable.multi_range_scan(reqs)
+
+    def _fetch_immutable(
+        self, example: TrainingExample, projection: Optional[TenantProjection]
+    ) -> ev.EventBatch:
+        parts = self.immutable.multi_range_scan(
+            self._requests_for(example, projection), self.io_stats)
         imm = self._join_groups(parts)
-        full = self._wants_full_window(projection, meta.seq_len, max_events)
-        if self.validate_checksum and meta.checksum and full:
-            self._check(example, imm, meta)
+        self._maybe_check(example, imm, projection)
+        self.stats.windows_fetched += 1
         return imm
+
+    def _maybe_check(
+        self,
+        example: TrainingExample,
+        imm: ev.EventBatch,
+        projection: Optional[TenantProjection],
+    ) -> None:
+        """Checksum-validate iff the full window was fetched (a projected
+        fetch can legitimately differ from the snapshot-time window)."""
+        meta = example.version
+        assert meta is not None
+        max_events = -1 if projection is None else projection.seq_len
+        if (self.validate_checksum and meta.checksum
+                and self._wants_full_window(projection, meta.seq_len, max_events)):
+            self._check(example, imm, meta)
 
     def _wants_full_window(self, projection, snap_len: int, max_events: int) -> bool:
         return projection is None or max_events >= snap_len

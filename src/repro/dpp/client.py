@@ -53,6 +53,10 @@ class RebatchingClient:
         self._lock = threading.Lock()
         self._closed = threading.Event()
         self.shuffle_seed = shuffle_seed
+        # producer-side emit counter: the reshuffle seed must NOT depend on
+        # stats.full_batches (incremented by the CONSUMER), else the shuffle
+        # of batch k varies with trainer timing and runs aren't reproducible
+        self._emit_seq = 0
         self.stats = ClientStats()
 
     # -- producer side (DPP workers) --------------------------------------------
@@ -73,9 +77,7 @@ class RebatchingClient:
         while n - emitted >= self.full_batch_size:
             full = {k: v[emitted : emitted + self.full_batch_size]
                     for k, v in merged.items()}
-            if self.shuffle_seed is not None:
-                full = reshuffle(full, self.shuffle_seed + self.stats.full_batches)
-            self._q.put(full)
+            self._emit(full)
             emitted += self.full_batch_size
         if emitted < n:
             rest = {k: v[emitted:] for k, v in merged.items()}
@@ -83,8 +85,23 @@ class RebatchingClient:
                 self._pending.insert(0, rest)
                 self._pending_rows += n - emitted
 
+    def _emit(self, full: Dict[str, np.ndarray]) -> None:
+        if self.shuffle_seed is not None:
+            with self._lock:
+                seq = self._emit_seq
+                self._emit_seq += 1
+            full = reshuffle(full, self.shuffle_seed + seq)
+        self._q.put(full)
+
     def close(self) -> None:
+        """Flush the pending remainder as a final short batch, then signal end
+        of stream (the tail of an epoch must not be silently dropped)."""
         self._closed.set()
+        with self._lock:
+            pending, self._pending = self._pending, []
+            self._pending_rows = 0
+        if pending:
+            self._emit(merge_base_batches(pending))
         self._q.put(None)
 
     # -- consumer side (trainer loop) --------------------------------------------

@@ -33,6 +33,10 @@ class WorkerStats:
     lookup_time_s: float = 0.0    # immutable UIH multi-range scan
     featurize_time_s: float = 0.0
     total_time_s: float = 0.0
+    # planned-scan savings, accumulated from the store's IOStats per lookup
+    dedup_hits: int = 0           # requests answered by an in-plan twin
+    decode_cache_hits: int = 0    # stripe decodes served from the decode LRU
+    parallel_shards: int = 0      # cumulative shard fanout of batched scans
 
     @property
     def busy_time_s(self) -> float:
@@ -65,7 +69,15 @@ class DPPWorker:
     # -- single base batch -----------------------------------------------------
     def _lookup(self, examples: List[TrainingExample]) -> List[ev.EventBatch]:
         t0 = time.perf_counter()
+        # materializer-local IO accounting: the store's global stats are
+        # shared across workers, so deltas of them would mix in other
+        # workers' concurrent traffic
+        before = self.materializer.io_stats.snapshot()
         uihs = self.materializer.materialize_batch(examples, self.projection)
+        d = self.materializer.io_stats.delta(before)
+        self.stats.dedup_hits += d.dedup_hits
+        self.stats.decode_cache_hits += d.decode_cache_hits
+        self.stats.parallel_shards += d.parallel_shards
         self.stats.lookup_time_s += time.perf_counter() - t0
         return uihs
 

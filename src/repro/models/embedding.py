@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
+
 Params = Dict[str, Any]
 
 
@@ -55,7 +57,7 @@ def bag_rowsharded(
         return jax.lax.psum(jnp.sum(emb, axis=-2), model_axis)
 
     dp = tuple(data_axes) if data_axes else None
-    out = jax.shard_map(
+    out = shard_map(
         inner, mesh=mesh,
         in_specs=(P(model_axis, None), P(dp, None), P(dp, None)),
         out_specs=P(dp, None),
@@ -96,7 +98,7 @@ def seq_rowsharded(table, ids, mesh, data_axes=("data",),
         return jax.lax.psum(emb, model_axis)
 
     dp = tuple(data_axes) if data_axes else None
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh,
         in_specs=(P(model_axis, None), P(dp, None)),
         out_specs=P(dp, None, None),

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
+
 from repro.models.layers import _init
 
 Params = Dict[str, Any]
@@ -211,7 +213,7 @@ def moe_ffn(
         wd = ("data",) if "data" in mesh.axis_names else ()
         inner = partial(_moe_inner_2d, cfg=cfg, model_axis=model_axis,
                         data_axis=wd)
-        out = jax.shard_map(
+        out = shard_map(
             inner,
             mesh=mesh,
             in_specs=(P(None, None), P(None, None),
@@ -223,7 +225,7 @@ def moe_ffn(
         P = jax.sharding.PartitionSpec
         dp = tuple(data_axes) if data_axes else None  # () -> replicated tokens
         inner = partial(_moe_inner, cfg=cfg, model_axis=model_axis)
-        out = jax.shard_map(
+        out = shard_map(
             inner,
             mesh=mesh,
             in_specs=(P(dp, None), P(None, None),

@@ -14,11 +14,18 @@ The serialized layout stores a msgpack header with *per-column byte offsets*, so
 columns entirely at the byte level. An optional zstd pass compresses the column
 payloads (off by default: the bit-level codecs already dominate, and benchmarks
 measure both).
+
+``StripeDecodeCache`` is the store-side block-cache analogue (§4.2.3) for the
+batched read path: a bounded, thread-safe LRU of *decoded* stripes keyed on
+``(blob identity, traits)``, so a hot stripe touched by many requests of one
+batch (same-user, same-day traffic) is decoded once and shared.
 """
 from __future__ import annotations
 
 import struct
+import threading
 import zlib
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import msgpack
@@ -204,6 +211,58 @@ def decode_stripe(
         missing = want - set(out)
         assert not missing, f"stripe missing traits {missing}"
     return out
+
+
+class StripeDecodeCache:
+    """Bounded LRU of decoded stripes keyed on ``(blob identity, traits)``.
+
+    The cache holds a reference to each cached blob, so ``id(blob)`` stays
+    unique among live keys (an evicted entry drops its reference and the key
+    with it). Hits return a shallow copy of the column dict — the arrays are
+    shared read-only, the dict is caller-private. Thread-safe: the batched
+    executor decodes from several shard threads concurrently.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        assert max_entries > 0
+        self.max_entries = max_entries
+        # key -> (blob ref, decoded batch)
+        self._entries: "OrderedDict[Tuple[int, Optional[Tuple[str, ...]]], Tuple[bytes, ev.EventBatch]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(
+        self,
+        blob: bytes,
+        schema: ev.TraitSchema,
+        traits: Optional[Sequence[str]] = None,
+    ) -> Tuple[ev.EventBatch, bool]:
+        """Decoded stripe + whether it was served from cache."""
+        key = (id(blob), tuple(traits) if traits is not None else None)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and entry[0] is blob:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return dict(entry[1]), True
+        batch = decode_stripe(blob, schema, traits)
+        for arr in batch.values():  # shared across callers: freeze, don't corrupt
+            arr.flags.writeable = False
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = (blob, batch)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return dict(batch), False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 def decoded_bytes_for(blob: bytes, traits: Optional[Sequence[str]] = None) -> int:

@@ -16,11 +16,25 @@ dimensions (§4.1.2):
      recent backwards) as needed for the tenant's ``max_events``;
   2. feature-group projection — the composite key isolates groups physically;
   3. trait projection — selective byte-level decoding inside a stripe.
+
+Batched reads are *planned* (§4.2.3, "optimized multi-range scan with parallel
+I/O"). ``plan()`` dedupes identical ``(user_id, group, bounds, max_events,
+traits)`` requests and groups the survivors by shard; ``execute_plan()`` then
+runs the shard groups concurrently on a thread pool, charging the
+``latency_model`` once per shard (parallel remote I/O) instead of once for the
+whole batch, and decoding each stripe blob at most once per batch via the
+``columnar.StripeDecodeCache`` LRU. ``IOStats`` exposes the plan's work
+savings: ``dedup_hits`` (requests answered by an identical in-batch twin),
+``decode_cache_hits`` (stripe decodes skipped), and ``parallel_shards``
+(cumulative shard fanout executed concurrently by batched scans).
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -54,8 +68,11 @@ class IOStats:
     stripes_read: int = 0
     bytes_scanned: int = 0    # stripe blob bytes touched (I/O)
     bytes_decoded: int = 0    # payload bytes actually decoded (selective decode)
-    requests: int = 0
+    requests: int = 0         # scans actually executed (post-dedupe)
     batched_requests: int = 0
+    dedup_hits: int = 0         # requests answered by an identical in-plan twin
+    decode_cache_hits: int = 0  # stripe decodes served from the decode LRU
+    parallel_shards: int = 0    # cumulative shard fanout of batched executions
 
     def snapshot(self) -> "IOStats":
         return dataclasses.replace(self)
@@ -64,9 +81,35 @@ class IOStats:
         return IOStats(*(getattr(self, f.name) - getattr(since, f.name)
                          for f in dataclasses.fields(IOStats)))
 
+    def merge(self, other: "IOStats") -> None:
+        for f in dataclasses.fields(IOStats):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+@dataclasses.dataclass
+class ScanPlan:
+    """Deduped, shard-grouped execution plan for a batch of scan requests."""
+
+    unique: List[ScanRequest]          # deduped requests, first-seen order
+    assignment: List[int]              # original request idx -> unique idx
+    shard_groups: Dict[int, List[int]]  # shard -> indices into ``unique``
+
+    @property
+    def dedup_hits(self) -> int:
+        return len(self.assignment) - len(self.unique)
+
+    @property
+    def fanout(self) -> int:
+        return len(self.shard_groups)
+
 
 class ImmutableUIHStore:
-    def __init__(self, schema: Optional[ev.TraitSchema] = None, n_shards: int = 8):
+    def __init__(
+        self,
+        schema: Optional[ev.TraitSchema] = None,
+        n_shards: int = 8,
+        decode_cache_size: int = 256,
+    ):
         self.schema = schema or ev.default_schema()
         self.router = ShardRouter(n_shards)
         # shard -> (user_id, group) -> (sorted start_ts list, stripes list)
@@ -78,7 +121,18 @@ class ImmutableUIHStore:
         self.bulk_load_bytes = 0
         # Optional remote-I/O latency emulation for DPP benchmarks:
         # callable(seeks, bytes_scanned, shard_fanout) -> seconds to sleep.
+        # Batched execution charges it once per shard group (parallel I/O).
         self.latency_model = None
+        self.decode_cache = (
+            columnar.StripeDecodeCache(decode_cache_size)
+            if decode_cache_size > 0 else None
+        )
+        self._stats_lock = threading.Lock()
+        # eager: an idle executor spawns no threads until first submit, and
+        # eager construction avoids double-create races on first batched scan
+        self._pool = ThreadPoolExecutor(
+            max_workers=min(n_shards, 16), thread_name_prefix="uih-scan"
+        )
 
     # -- bulk load (write path) ---------------------------------------------
     def bulk_load(
@@ -110,15 +164,27 @@ class ImmutableUIHStore:
         shard = self.router.route(user_id)
         return shard, self._shards[shard].get((user_id, group))
 
-    def scan(self, req: ScanRequest) -> ev.EventBatch:
-        """Bounded range scan with 3-dimensional projection pushdown."""
-        self.stats.requests += 1
+    def _decode(self, s: Stripe, traits, stats: IOStats) -> ev.EventBatch:
+        if self.decode_cache is None:
+            stats.bytes_decoded += columnar.decoded_bytes_for(s.blob, traits)
+            return columnar.decode_stripe(s.blob, self.schema, traits)
+        batch, hit = self.decode_cache.get(s.blob, self.schema, traits)
+        if hit:
+            stats.decode_cache_hits += 1
+        else:
+            stats.bytes_decoded += columnar.decoded_bytes_for(s.blob, traits)
+        return batch
+
+    def _scan_into(self, req: ScanRequest, stats: IOStats) -> ev.EventBatch:
+        """Execute one range scan, accounting I/O into ``stats`` (the batched
+        executor passes per-shard accumulators so shard threads don't race)."""
+        stats.requests += 1
         traits = req.traits or self.schema.group_traits(req.group)
         shard, entry = self._locate(req.user_id, req.group)
         if entry is None:
             return ev.empty_batch(self.schema, traits)
         starts, stripes = entry
-        self.stats.seeks += 1  # single-level layout: one seek per (user,group) run
+        stats.seeks += 1  # single-level layout: one seek per (user,group) run
 
         # stripe run overlapping [start_ts, end_ts]
         lo = bisect.bisect_right(starts, req.start_ts) - 1
@@ -145,10 +211,9 @@ class ImmutableUIHStore:
 
         parts: List[ev.EventBatch] = []
         for s in chosen:
-            self.stats.stripes_read += 1
-            self.stats.bytes_scanned += len(s.blob)
-            self.stats.bytes_decoded += columnar.decoded_bytes_for(s.blob, traits)
-            parts.append(columnar.decode_stripe(s.blob, self.schema, traits))
+            stats.stripes_read += 1
+            stats.bytes_scanned += len(s.blob)
+            parts.append(self._decode(s, traits, stats))
         out = ev.concat_batches(parts)
         if not out:
             return ev.empty_batch(self.schema, traits)
@@ -159,21 +224,90 @@ class ImmutableUIHStore:
             out = ev.slice_batch(out, n - req.max_events, n)
         return out
 
-    def multi_range_scan(self, reqs: Sequence[ScanRequest]) -> List[ev.EventBatch]:
-        """Batched scan (paper: 'optimized multi-range scan with parallel I/O'):
-        amortizes per-request overhead; shard fanout of the batch is recorded so
-        the data-affinity benchmarks can show the symmetric-sharding win."""
-        self.stats.batched_requests += 1
-        before = self.stats.snapshot()
-        out = [self.scan(r) for r in reqs]
-        if self.latency_model is not None:
-            import time
+    def scan(self, req: ScanRequest) -> ev.EventBatch:
+        """Bounded range scan with 3-dimensional projection pushdown."""
+        return self._scan_into(req, self.stats)
 
-            d = self.stats.delta(before)
-            delay = self.latency_model(d.seeks, d.bytes_scanned, self.fanout(reqs))
-            if delay > 0:
-                time.sleep(delay)
-        return out
+    # -- planned batch execution ----------------------------------------------
+    def plan(self, reqs: Sequence[ScanRequest]) -> ScanPlan:
+        """Dedupe identical requests and group the survivors by shard."""
+        index: Dict[ScanRequest, int] = {}
+        unique: List[ScanRequest] = []
+        assignment: List[int] = []
+        shard_groups: Dict[int, List[int]] = {}
+        for r in reqs:
+            j = index.get(r)
+            if j is None:
+                j = index[r] = len(unique)
+                unique.append(r)
+                shard_groups.setdefault(self.router.route(r.user_id), []).append(j)
+            assignment.append(j)
+        return ScanPlan(unique=unique, assignment=assignment,
+                        shard_groups=shard_groups)
+
+    def close(self) -> None:
+        """Shut down the shard-scan thread pool (idempotent). Long-lived
+        processes that churn through stores should close them (or use the
+        store as a context manager); short-lived ones can rely on interpreter
+        exit — an unused pool never spawns threads."""
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ImmutableUIHStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def execute_plan(
+        self, plan: ScanPlan, out_stats: Optional[IOStats] = None
+    ) -> List[ev.EventBatch]:
+        """Run a plan's shard groups concurrently; results in original request
+        order (deduped requests share one execution).
+
+        ``out_stats``: optional caller-owned accumulator that receives this
+        call's delta as well — the global ``self.stats`` is shared across all
+        callers, so a concurrent caller cannot attribute snapshot/delta
+        windows of it to its own traffic."""
+        results: List[Optional[ev.EventBatch]] = [None] * len(plan.unique)
+
+        def run_shard(group: List[int]) -> IOStats:
+            local = IOStats()
+            for j in group:
+                results[j] = self._scan_into(plan.unique[j], local)
+            if self.latency_model is not None:
+                # each shard pays its own I/O latency (plus the batch's
+                # cross-shard coordination term); shards overlap, so the
+                # batch's wall time is the max over shards, not the sum
+                delay = self.latency_model(local.seeks, local.bytes_scanned,
+                                           plan.fanout)
+                if delay > 0:
+                    time.sleep(delay)
+            return local
+
+        groups = list(plan.shard_groups.values())
+        if len(groups) <= 1:
+            shard_stats = [run_shard(g) for g in groups]
+        else:
+            shard_stats = list(self._pool.map(run_shard, groups))
+        call = IOStats(batched_requests=1, dedup_hits=plan.dedup_hits,
+                       parallel_shards=plan.fanout)
+        for local in shard_stats:
+            call.merge(local)
+        with self._stats_lock:
+            self.stats.merge(call)
+        if out_stats is not None:
+            out_stats.merge(call)
+        return [results[j] for j in plan.assignment]
+
+    def multi_range_scan(
+        self,
+        reqs: Sequence[ScanRequest],
+        out_stats: Optional[IOStats] = None,
+    ) -> List[ev.EventBatch]:
+        """Batched scan (paper: 'optimized multi-range scan with parallel I/O'):
+        plans (dedupe + shard grouping), then executes shards concurrently —
+        see ``plan()`` / ``execute_plan()``."""
+        return self.execute_plan(self.plan(reqs), out_stats)
 
     # -- introspection ---------------------------------------------------------
     def fanout(self, reqs: Sequence[ScanRequest]) -> int:

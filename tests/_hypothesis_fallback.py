@@ -1,0 +1,79 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite only use ``@settings(...)``, ``@given(...)``
+and three strategies (``integers``, ``floats``, ``sampled_from``). This shim
+replays each property as a deterministic sweep: the first iterations pin the
+strategy boundaries (min / max / midpoint), the rest draw from a seeded RNG.
+No shrinking, no example database — just enough coverage to keep the
+properties exercised on machines without the real dependency (pinned in
+``requirements-test.txt``).
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, boundary, draw):
+        self.boundary = list(boundary)
+        self.draw = draw  # callable(rng) -> value
+
+
+def _integers(min_value, max_value):
+    mid = min_value + (max_value - min_value) // 2
+    return _Strategy(
+        [min_value, max_value, mid],
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+    )
+
+
+def _floats(min_value, max_value):
+    mid = (min_value + max_value) / 2.0
+    return _Strategy(
+        [min_value, max_value, mid],
+        lambda rng: float(rng.uniform(min_value, max_value)),
+    )
+
+
+def _sampled_from(options):
+    opts = list(options)
+    return _Strategy(opts, lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from
+)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # no functools.wraps: pytest must see the zero-arg wrapper signature,
+        # not the property's drawn parameters (it would treat them as fixtures)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn = {
+                    name: (s.boundary[i] if i < len(s.boundary) else s.draw(rng))
+                    for name, s in strats.items()
+                }
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples",
+                                                 20)
+        return wrapper
+
+    return deco

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to a fixed-examples sweep (see the shim)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.delta_decode import ops as dd_ops
 from repro.kernels.delta_decode import ref as dd_ref
