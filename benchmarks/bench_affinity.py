@@ -35,8 +35,9 @@ def _run_plan(sim, plan, emulate_io: bool):
     return d, n / wall, wall
 
 
-def run() -> List[BenchResult]:
-    sim = standard_sim("vlm", users=32, days=6, req_per_day=6)
+def run(quick: bool = False) -> List[BenchResult]:
+    sim = standard_sim("vlm", users=8, days=2, req_per_day=3) if quick \
+        else standard_sim("vlm", users=32, days=6, req_per_day=6)
     n_shards = sim.immutable.router.n_shards
     affine = plan_affine(sim.examples, n_shards, 16)
     arrival = plan_arrival_order(sim.examples, n_shards, 16)

@@ -19,13 +19,13 @@ from repro.kernels.jagged import ops as jg_ops
 from repro.storage import columnar
 
 
-def run() -> List[BenchResult]:
+def run(quick: bool = False) -> List[BenchResult]:
     out: List[BenchResult] = []
     rng = np.random.default_rng(0)
     schema = ev.default_schema()
 
     # columnar codec encode/decode rate (host-side DPP hot path)
-    n = 50_000
+    n = 2_000 if quick else 50_000
     ts = np.sort(rng.integers(0, 1 << 40, size=n)).astype(np.int64)
     batch = {
         "timestamp": ts,
@@ -48,8 +48,9 @@ def run() -> List[BenchResult]:
                            {"speedup_vs_full": round(t_dec / t_sel, 2)}))
 
     # delta-decode kernel (interpret) vs oracle
-    deltas = rng.integers(0, 1 << 16, size=(8, 512)).astype(np.int32)
-    bases = rng.integers(0, 1 << 20, size=8).astype(np.int32)
+    deltas = rng.integers(0, 1 << 16, size=(4, 64) if quick else (8, 512)
+                          ).astype(np.int32)
+    bases = rng.integers(0, 1 << 20, size=deltas.shape[0]).astype(np.int32)
     dj, bj = jnp.asarray(deltas), jnp.asarray(bases)
     got = dd_ops.delta_decode(dj, bj)
     want = dd_ref.delta_decode(dj, bj)
@@ -59,22 +60,24 @@ def run() -> List[BenchResult]:
                             "elements": deltas.size}))
 
     # jagged->padded kernel (interpret)
-    lens = rng.integers(0, 96, size=64)
-    offsets = np.zeros(65, np.int32); np.cumsum(lens, out=offsets[1:])
+    rows, ml = (8, 16) if quick else (64, 64)
+    lens = rng.integers(0, int(1.5 * ml), size=rows)
+    offsets = np.zeros(rows + 1, np.int32); np.cumsum(lens, out=offsets[1:])
     values = rng.standard_normal((int(offsets[-1]), 128)).astype(np.float32)
     vj, oj = jnp.asarray(values), jnp.asarray(offsets)
-    t_j = timeit(lambda: jg_ops.jagged_to_padded(vj, oj, 64).block_until_ready())
+    t_j = timeit(lambda: jg_ops.jagged_to_padded(vj, oj, ml).block_until_ready())
     out.append(BenchResult("kernel/jagged_to_padded", t_j,
-                           {"rows": 64, "max_len": 64, "d": 128}))
+                           {"rows": rows, "max_len": ml, "d": 128}))
 
     # embedding bag kernel (interpret)
+    bags, bag_len = (4, 8) if quick else (32, 20)
     table = jnp.asarray(rng.standard_normal((4096, 128)), jnp.float32)
-    ids = jnp.asarray(rng.integers(0, 4096, (32, 20)), jnp.int32)
-    mask = jnp.ones((32, 20), bool)
+    ids = jnp.asarray(rng.integers(0, 4096, (bags, bag_len)), jnp.int32)
+    mask = jnp.ones((bags, bag_len), bool)
     t_e = timeit(lambda: eb_ops.embedding_bag(table, ids, mask)
                  .block_until_ready())
     out.append(BenchResult("kernel/embedding_bag", t_e,
-                           {"bags": 32, "bag_len": 20, "d": 128}))
+                           {"bags": bags, "bag_len": bag_len, "d": 128}))
     return out
 
 

@@ -14,19 +14,23 @@ SPEC = FeatureSpec(seq_len=256, uih_traits=("item_id",))
 DELAY = 0.004  # comparable probe/lookup latencies (paper's assumption)
 
 
-def _worker(sim):
+def _worker(sim, delay=DELAY):
     mat = sim.materializer(validate_checksum=False)
-    mat.immutable.latency_model = lambda seeks, nbytes, fanout: DELAY
-    return DPPWorker(mat, TENANT, SPEC, sim.schema, probe_latency_s=DELAY)
+    mat.immutable.latency_model = lambda seeks, nbytes, fanout: delay
+    return DPPWorker(mat, TENANT, SPEC, sim.schema, probe_latency_s=delay)
 
 
-def run() -> List[BenchResult]:
-    sim = standard_sim("vlm", users=32, days=5, req_per_day=5)
-    examples = sim.examples[:320]
+def run(quick: bool = False) -> List[BenchResult]:
+    if quick:
+        sim = standard_sim("vlm", users=8, days=2, req_per_day=3)
+        examples, delay = sim.examples[:32], 0.001
+    else:
+        sim = standard_sim("vlm", users=32, days=5, req_per_day=5)
+        examples, delay = sim.examples[:320], DELAY
 
-    w_serial = _worker(sim)
+    w_serial = _worker(sim, delay)
     n_serial = sum(1 for _ in w_serial.run_serial(probe_from_list(examples, 16)))
-    w_piped = _worker(sim)
+    w_piped = _worker(sim, delay)
     n_piped = sum(1 for _ in w_piped.run_pipelined(probe_from_list(examples, 16)))
     assert n_serial == n_piped
 

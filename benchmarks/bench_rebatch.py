@@ -66,9 +66,13 @@ def _throughput(sim, base_batch: int) -> float:
     return len(examples) / wall
 
 
-def run() -> List[BenchResult]:
-    sim = standard_sim("vlm", users=32, days=5, req_per_day=6)
-    sizes = [4, 16, 64, FULL_BATCH]
+def run(quick: bool = False) -> List[BenchResult]:
+    if quick:
+        sim = standard_sim("vlm", users=16, days=2, req_per_day=6)
+        sizes = [4, FULL_BATCH]
+    else:
+        sim = standard_sim("vlm", users=32, days=5, req_per_day=6)
+        sizes = [4, 16, 64, FULL_BATCH]
     thr = {s: _throughput(sim, s) for s in sizes}
     best = max(thr, key=thr.get)
     # the paper's claim: tuned base batches + trainer-side rebatching beat the

@@ -64,8 +64,9 @@ def _run(sim, batches, planned: bool, decode_cache: bool):
     return d, n / wall, wall
 
 
-def run() -> List[BenchResult]:
-    sim = standard_sim("vlm", users=24, days=6, req_per_day=8)
+def run(quick: bool = False) -> List[BenchResult]:
+    sim = standard_sim("vlm", users=8, days=2, req_per_day=4) if quick \
+        else standard_sim("vlm", users=24, days=6, req_per_day=8)
     batches = _user_bucketed_batches(sim, base=16)
 
     # per-example baseline: one multi_range_scan per example, no decode cache

@@ -9,10 +9,12 @@ from benchmarks.common import BenchResult
 from repro.core.fatrow import WorkloadModel, fat_row_cost, fat_row_wall, vlm_cost
 
 
-def run() -> List[BenchResult]:
+def run(quick: bool = False) -> List[BenchResult]:
     m = WorkloadModel()
     out: List[BenchResult] = []
-    for seq in [256, 1024, 4096, 16_384, 65_536, 262_144]:
+    seqs = [256, 4096, 65_536] if quick \
+        else [256, 1024, 4096, 16_384, 65_536, 262_144]
+    for seq in seqs:
         f = fat_row_cost(seq, m)
         v = vlm_cost(seq, m)
         out.append(BenchResult(

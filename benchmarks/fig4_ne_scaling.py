@@ -34,6 +34,10 @@ from repro.train.optimizer import AdamWConfig, adamw_init, make_train_step
 SEQ_LENS = [4, 16, 64, 192]
 STEPS = 250
 BATCH = 64
+# --quick smoke overrides (not meaningful measurements)
+QUICK_SEQ_LENS = [4, 16]
+QUICK_STEPS = 30
+QUICK_BATCH = 16
 
 
 LOOKBACK_EVENTS = 128
@@ -52,7 +56,7 @@ def _label_fn(uih, candidate, rng):
     return {"click": float(rng.random() < p)}
 
 
-def _make_batches(sim, seq_len: int, seed: int):
+def _make_batches(sim, seq_len: int, seed: int, batch: int = BATCH):
     tenant = TenantProjection(
         f"len{seq_len}", seq_len=seq_len,
         feature_groups=("core", "sideinfo"),
@@ -69,8 +73,8 @@ def _make_batches(sim, seq_len: int, seed: int):
     order = rng.permutation(len(sim.examples))
     examples = [sim.examples[i] for i in order]
     batches = []
-    for lo in range(0, len(examples) - BATCH + 1, BATCH):
-        batches.append(worker.process(examples[lo : lo + BATCH]))
+    for lo in range(0, len(examples) - batch + 1, batch):
+        batches.append(worker.process(examples[lo : lo + batch]))
     return batches
 
 
@@ -94,26 +98,27 @@ def _prep(batch, cfg):
     }
 
 
-def _train_ne(sim, seq_len: int, seed: int = 0) -> float:
+def _train_ne(sim, seq_len: int, seed: int = 0, steps: int = STEPS,
+              batch: int = BATCH) -> float:
     cfg = DLRMUIHConfig(
         name="fig4", seq_len=seq_len, d_seq=16, n_seq_layers=2, n_heads=2,
         n_dense=4, n_sparse=2, embed_dim=8, item_vocab=5_000, field_vocab=1_000,
         compute_dtype=jnp.float32, remat=False,
     )
-    batches = [_prep(b, cfg) for b in _make_batches(sim, seq_len, seed)]
+    batches = [_prep(b, cfg) for b in _make_batches(sim, seq_len, seed, batch)]
     n_eval = max(2, len(batches) // 4)
     train, test = batches[n_eval:], batches[:n_eval]
     params = R.init_dlrm_uih(jax.random.PRNGKey(seed), cfg)
-    opt_cfg = AdamWConfig(lr=2e-3, warmup_steps=15, total_steps=STEPS,
+    opt_cfg = AdamWConfig(lr=2e-3, warmup_steps=15, total_steps=steps,
                           weight_decay=0.01)
     step = jax.jit(make_train_step(lambda p, b: dlrm_uih_loss(p, b, cfg),
                                    opt_cfg))
     fwd = jax.jit(lambda p, b: dlrm_uih_forward(p, b, cfg))
     opt = adamw_init(params)
     best = float("inf")
-    for i in range(STEPS):
+    for i in range(steps):
         params, opt, _ = step(params, opt, train[i % len(train)])
-        if (i + 1) % 25 == 0:  # early-stopping eval on held-out batches
+        if (i + 1) % min(25, steps) == 0:  # early-stopping eval on held-out batches
             ne = float(np.mean([
                 float(normalized_entropy(fwd(params, b), b["label"]))
                 for b in test]))
@@ -121,42 +126,46 @@ def _train_ne(sim, seq_len: int, seed: int = 0) -> float:
     return best
 
 
-def _sim(mode):
+def _sim(mode, quick: bool = False):
     from repro.core.simulation import ProductionSim, SimConfig
 
+    users, days = (24, 3) if quick else (256, 6)
     cfg = SimConfig(
-        stream=ev.StreamConfig(n_users=256, n_items=5_000, n_categories=256,
-                               days=6, events_per_user_day_mean=50.0, seed=42),
+        stream=ev.StreamConfig(n_users=users, n_items=5_000, n_categories=256,
+                               days=days, events_per_user_day_mean=50.0, seed=42),
         stripe_len=32, requests_per_user_day=6,
-        lookback_ms=5 * ev.MS_PER_DAY, n_shards=8, mode=mode, seed=42)
+        lookback_ms=(days - 1) * ev.MS_PER_DAY, n_shards=8, mode=mode, seed=42)
     s = ProductionSim(cfg)
     s.label_fn = _label_fn
-    s.run_days(5, capture_reference=False)
+    s.run_days(days - 1, capture_reference=False)
     return s
 
 
-def run() -> List[BenchResult]:
-    sim = _sim("vlm")
+def run(quick: bool = False) -> List[BenchResult]:
+    seq_lens = QUICK_SEQ_LENS if quick else SEQ_LENS
+    steps = QUICK_STEPS if quick else STEPS
+    batch = QUICK_BATCH if quick else BATCH
+    sim = _sim("vlm", quick)
     out: List[BenchResult] = []
     nes = {}
-    for sl in SEQ_LENS:
-        nes[sl] = _train_ne(sim, sl)
+    for sl in seq_lens:
+        nes[sl] = _train_ne(sim, sl, steps=steps, batch=batch)
         out.append(BenchResult(f"fig4/ne_seq_{sl}", 0.0,
                                {"ne": round(nes[sl], 4)}))
-    gain = 100.0 * (nes[SEQ_LENS[0]] - nes[SEQ_LENS[-1]]) / nes[SEQ_LENS[0]]
+    gain = 100.0 * (nes[seq_lens[0]] - nes[seq_lens[-1]]) / nes[seq_lens[0]]
     improving = sum(
-        nes[a] > nes[b] for a, b in zip(SEQ_LENS, SEQ_LENS[1:]))
+        nes[a] > nes[b] for a, b in zip(seq_lens, seq_lens[1:]))
     out.append(BenchResult(
         "fig4/scaling", 0.0,
         {"ne_gain_short_to_long_pct": round(gain, 2),
-         "monotone_improvements": f"{improving}/{len(SEQ_LENS) - 1}",
+         "monotone_improvements": f"{improving}/{len(seq_lens) - 1}",
          "paper": "platform A >5% cumulative NE gain 256->64K"},
     ))
 
     # VLM == Fat Row parity: identical NE because materialization is exact
-    fat = _sim("fatrow")
-    sl = SEQ_LENS[1]
-    ne_fat = _train_ne(fat, sl)
+    fat = _sim("fatrow", quick)
+    sl = seq_lens[1]
+    ne_fat = _train_ne(fat, sl, steps=steps, batch=batch)
     out.append(BenchResult(
         "fig4/vlm_vs_fatrow_parity", 0.0,
         {"seq_len": sl, "ne_vlm": round(nes[sl], 4),

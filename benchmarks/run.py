@@ -1,7 +1,15 @@
 """Benchmark aggregator: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV and writes benchmarks/results.json."""
+Prints ``name,us_per_call,derived`` CSV and writes benchmarks/results.json.
+
+``--quick`` runs every module at a tiny smoke config (seconds, not minutes) —
+the tier-1 suite drives it (tests/test_benchmarks_quick.py) so a refactor
+that breaks a benchmark module fails CI instead of rotting silently. Quick
+numbers are NOT meaningful measurements; results.json is only written by
+full runs.
+"""
 from __future__ import annotations
 
+import inspect
 import json
 import sys
 import time
@@ -15,15 +23,28 @@ MODULES = [
     "benchmarks.bench_affinity",
     "benchmarks.bench_scan_plan",
     "benchmarks.bench_rebatch",
+    "benchmarks.bench_feed",
     "benchmarks.bench_kernels",
     "benchmarks.fig4_ne_scaling",
 ]
 
 
-def main() -> None:
+def run_module(modname: str, quick: bool = False):
+    """Import + execute one benchmark module, honoring ``quick`` if it does."""
     import importlib
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    mod = importlib.import_module(modname)
+    if quick and "quick" in inspect.signature(mod.run).parameters:
+        return mod.run(quick=True)
+    return mod.run()
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:]]
+    quick = "--quick" in args
+    if quick:
+        args.remove("--quick")
+    only = args[0] if args else None
     all_results = []
     failures = []
     print("name,us_per_call,derived")
@@ -32,8 +53,7 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            mod = importlib.import_module(modname)
-            results = mod.run()
+            results = run_module(modname, quick=quick)
         except Exception as e:
             failures.append(modname)
             print(f"{modname},ERROR,{type(e).__name__}: {e}", flush=True)
@@ -45,8 +65,11 @@ def main() -> None:
                                 "derived": r.derived})
         print(f"# {modname} done in {time.time() - t0:.1f}s", flush=True)
 
-    out = Path(__file__).parent / "results.json"
-    out.write_text(json.dumps(all_results, indent=1, default=str))
+    # persist only complete full-mode sweeps: quick numbers are smoke-test
+    # noise, and a filtered run would clobber every other module's results
+    if not quick and not only:
+        out = Path(__file__).parent / "results.json"
+        out.write_text(json.dumps(all_results, indent=1, default=str))
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -104,9 +104,15 @@ def _batch_replay(sim, tenant) -> Dict[str, float]:
             "primary_bytes": primary_bytes}
 
 
-def run() -> List[BenchResult]:
-    vlm = standard_sim("vlm")
-    fat = standard_sim("fatrow")
+def run(quick: bool = False) -> List[BenchResult]:
+    if quick:
+        vlm = standard_sim("vlm", users=6, days=2, req_per_day=3)
+        fat = standard_sim("fatrow", users=6, days=2, req_per_day=3)
+        tenants = {"model_c": TENANTS["model_c"]}
+    else:
+        vlm = standard_sim("vlm")
+        fat = standard_sim("fatrow")
+        tenants = TENANTS
 
     out: List[BenchResult] = []
     write_delta = 100.0 * (vlm.stream.bytes_published
@@ -119,7 +125,7 @@ def run() -> List[BenchResult]:
          "fat_bytes": fat.stream.bytes_published},
     ))
 
-    for name, tenant in TENANTS.items():
+    for name, tenant in tenants.items():
         fat_run = _batch_replay(fat, tenant)
         vlm_run = _batch_replay(vlm, tenant)
         lk_stream = _lookup_bytes(vlm, tenant, affine=False)

@@ -1,14 +1,16 @@
 """End-to-end training driver: the complete stack, one process.
 
   synthetic traffic -> mutable/immutable tiers -> VLM snapshots -> warehouse
-  -> DPP workers (projection pushdown + rebatching) -> DLRM-UIH trainer
-  (AdamW, grad accumulation, crash-safe checkpointing with auto-resume).
+  -> elastic DPP worker pool (affinity-planned items, vectorized featurize)
+  -> slot-based rebatching client -> double-buffered device prefetcher
+  -> DLRM-UIH trainer (AdamW, grad accumulation, crash-safe checkpointing).
 
 Run:  PYTHONPATH=src python examples/train_seqrec.py [--steps 200] [--resume]
 The model is the paper's flagship tenant (DLRM + UIH transformer encoder) at a
 CPU-sized config; the same driver drives pod-scale meshes via --arch configs.
 """
 import argparse
+import threading
 import time
 
 import jax
@@ -18,8 +20,11 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.projection import TenantProjection
 from repro.core.simulation import ProductionSim, SimConfig
+from repro.dpp.affinity import plan_affine
 from repro.dpp.client import RebatchingClient
+from repro.dpp.elastic import DPPWorkerPool, ElasticConfig, ElasticController
 from repro.dpp.featurize import FeatureSpec
+from repro.dpp.prefetch import DevicePrefetcher
 from repro.dpp.worker import DPPWorker
 from repro.models import recsys as R
 from repro.train.optimizer import AdamWConfig
@@ -27,6 +32,7 @@ from repro.train.train_loop import Trainer, TrainerConfig
 
 SEQ_LEN = 48
 BATCH = 32
+BASE_BATCH = 8
 
 
 def build_pipeline(seed: int = 0):
@@ -44,38 +50,56 @@ def build_pipeline(seed: int = 0):
     spec = FeatureSpec(seq_len=SEQ_LEN,
                        uih_traits=("item_id", "action_type", "category"),
                        candidate_fields=("item_id",), label_fields=("click",))
-    mat = sim.materializer(validate_checksum=False)
-    mat.window_cache_size = 256
-    worker = DPPWorker(mat, tenant, spec, sim.schema)
-    return sim, worker
+
+    def make_worker():
+        mat = sim.materializer(validate_checksum=False)
+        mat.window_cache_size = 256
+        return DPPWorker(mat, tenant, spec, sim.schema)
+
+    return sim, make_worker
 
 
-def batches(sim, worker, cfg, seed=0):
-    """Infinite shuffled epochs through the warehouse via the DPP worker."""
+def start_feed(sim, make_worker, steps: int, seed=0):
+    """Elastic DPP pool producing shuffled affinity-planned epochs into a
+    slot-based rebatching client, until ``steps`` full batches are covered."""
     client = RebatchingClient(BATCH, buffer_batches=4, shuffle_seed=seed)
+    n_shards = sim.immutable.router.n_shards
     rng = np.random.default_rng(seed)
-    while True:
+    need = steps * BATCH + BATCH  # rows to cover the run (+1 batch of slack)
+    items = []
+    while need > 0:
         order = rng.permutation(len(sim.examples))
-        for lo in range(0, len(order) - 8 + 1, 8):
-            base = [sim.examples[i] for i in order[lo : lo + 8]]
-            client.put(worker.process(base))     # base batches of 8 -> 32
-            full = client.get_full_batch(timeout=0)
-            if full is not None:
-                yield prep(full, cfg)
+        epoch = [sim.examples[i] for i in order]
+        items.extend(plan_affine(epoch, n_shards, BASE_BATCH).items)
+        need -= len(epoch)
+    pool = DPPWorkerPool(
+        make_worker, client, n_workers=2,
+        controller=ElasticController(ElasticConfig(min_workers=1, max_workers=8)))
+    pool.start(items)
+
+    def background_join():
+        try:
+            pool.join()   # closes the client even on worker failure
+        except RuntimeError:
+            import traceback
+            traceback.print_exc()
+
+    threading.Thread(target=background_join, daemon=True).start()
+    return client, pool
 
 
 def prep(b, cfg):
     return {
-        "uih_item_id": jnp.asarray(b["uih_item_id"] % cfg.item_vocab, jnp.int32),
-        "uih_action_type": jnp.asarray(b["uih_action_type"] % 16, jnp.int32),
-        "uih_mask": jnp.asarray(b["uih_mask"]),
-        "cand_item_id": jnp.asarray(b["cand_item_id"] % cfg.item_vocab, jnp.int32),
-        "sparse_ids": jnp.asarray(
-            np.stack([b["user_id"] % cfg.field_vocab,
-                      b["cand_item_id"] % cfg.field_vocab], 1), jnp.int32),
-        "dense": jnp.asarray(np.stack([b["uih_mask"].sum(1)] * 4, 1),
-                             jnp.float32) / SEQ_LEN,
-        "label": jnp.asarray(b["label_click"], jnp.float32),
+        "uih_item_id": (b["uih_item_id"] % cfg.item_vocab).astype(np.int32),
+        "uih_action_type": (b["uih_action_type"] % 16).astype(np.int32),
+        "uih_mask": b["uih_mask"],
+        "cand_item_id": (b["cand_item_id"] % cfg.item_vocab).astype(np.int32),
+        "sparse_ids": np.stack([b["user_id"] % cfg.field_vocab,
+                                b["cand_item_id"] % cfg.field_vocab],
+                               1).astype(np.int32),
+        "dense": np.stack([b["uih_mask"].sum(1)] * 4, 1).astype(np.float32)
+        / SEQ_LEN,
+        "label": b["label_click"].astype(np.float32),
     }
 
 
@@ -84,6 +108,8 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_seqrec_ckpt")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="bypass the device prefetcher (seed-style sync feed)")
     args = ap.parse_args()
 
     cfg = R.DLRMUIHConfig(
@@ -94,7 +120,7 @@ def main() -> None:
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"DLRM-UIH: {n_params/1e6:.2f}M params, seq_len={SEQ_LEN}")
 
-    sim, worker = build_pipeline()
+    sim, make_worker = build_pipeline()
     trainer = Trainer(
         lambda p, b: R.dlrm_uih_loss(p, b, cfg), params,
         TrainerConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=20,
@@ -104,16 +130,37 @@ def main() -> None:
     if args.resume and trainer.try_resume():
         print(f"resumed from step {trainer.step}")
 
+    client, pool = start_feed(sim, make_worker, args.steps)
+    if args.no_prefetch:
+        class _SyncFeed:  # seed-style: prep + transfer inside the step loop
+            def __iter__(self):
+                for b in client:
+                    yield {k: jnp.asarray(v) for k, v in prep(b, cfg).items()}
+
+            def record_train_step(self, s):
+                client.record_train_step(s)
+
+        feed = _SyncFeed()
+    else:
+        feed = DevicePrefetcher(client, depth=2,
+                                prep_fn=lambda b: prep(b, cfg))
+
     t0 = time.perf_counter()
-    trainer.fit(batches(sim, worker, cfg), max_steps=args.steps)
+    trainer.fit(feed, max_steps=args.steps)
     dt = time.perf_counter() - t0
     first = np.mean([h["loss"] for h in trainer.history[:10]])
     last = np.mean([h["loss"] for h in trainer.history[-10:]])
+    cs = client.stats
+    ws = pool.merged_worker_stats()
     print(f"\ntrained {trainer.step} steps in {dt:.1f}s "
           f"({trainer.step / dt:.1f} steps/s)")
     print(f"loss {first:.4f} -> {last:.4f}")
-    print(f"immutable store served {worker.materializer.immutable.stats.requests}"
-          f" scans, {worker.materializer.immutable.stats.bytes_scanned/1e6:.1f} MB")
+    print(f"feed: starvation {cs.starvation_pct:.1f}% "
+          f"(host {cs.starved_host_s*1e3:.0f}ms, h2d {cs.starved_h2d_s*1e3:.0f}ms), "
+          f"h2d total {cs.h2d_time_s*1e3:.0f}ms, slot reuses {cs.slot_reuses}, "
+          f"peak workers {pool.peak_workers}, worker waste {ws.waste_pct:.1f}%")
+    print(f"featurize {ws.featurize_time_s*1e3:.0f}ms over "
+          f"{ws.examples} examples ({ws.base_batches} base batches)")
 
 
 if __name__ == "__main__":

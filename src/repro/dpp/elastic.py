@@ -2,8 +2,11 @@
 
 The controller watches job-level GPU-starvation % (trainer idle) and worker
 waste % (CPU idle) and adjusts the provisioned worker count so training stays
-compute-bound. The pool re-dispatches work items whose worker exceeded the
-straggler deadline (speculative execution), and survives worker crashes.
+compute-bound. ``DPPWorkerPool`` runs N featurizing workers over planned work
+items straight into the trainer's slot-based rebatching client, resizing live
+on the controller's decisions. ``StragglerAwarePool`` re-dispatches work items
+whose worker exceeded the straggler deadline (speculative execution), and
+survives worker crashes.
 """
 from __future__ import annotations
 
@@ -11,7 +14,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -45,6 +48,211 @@ class PoolStats:
     completed: int = 0
     speculative_retries: int = 0
     worker_failures: int = 0
+
+
+class DPPWorkerPool:
+    """N DPP workers draining planned work items into a rebatching client.
+
+    Each thread owns a private ``DPPWorker`` (materializers are not shared
+    across threads — their window caches and IO accounting are thread-local by
+    design), pulls work items (example lists, e.g. ``plan_affine(...).items``)
+    from a shared queue, and ``put``s the featurized base batch into the slot
+    buffer of the trainer's ``RebatchingClient``.
+
+    Elasticity: a monitor thread periodically feeds the job-level signals —
+    trainer ``starvation_pct`` from the client, mean worker ``waste_pct`` —
+    to an ``ElasticController`` and applies its decision: growth starts new
+    worker threads immediately; shrink is cooperative (threads with index
+    beyond the target retire before their next pull). Worker exceptions are
+    captured and re-raised from ``join``/``run`` — never swallowed.
+    """
+
+    def __init__(
+        self,
+        worker_factory: Callable[[], "object"],
+        client,
+        n_workers: int = 2,
+        controller: Optional[ElasticController] = None,
+        control_interval_s: float = 0.25,
+        close_client: bool = True,
+        jagged: bool = True,
+    ):
+        self.worker_factory = worker_factory
+        self.client = client
+        self.controller = controller
+        self.control_interval_s = control_interval_s
+        self.close_client = close_client
+        # fused path: workers emit arena+offsets base batches and the client
+        # scatters them straight into slots (falls back to the dense put when
+        # either side predates the jagged API)
+        self.jagged = (jagged and hasattr(client, "put_jagged"))
+        self._items: "queue.Queue" = queue.Queue()
+        self._n_initial = n_workers
+        self._lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self._workers: List[object] = []
+        self._errors: List[BaseException] = []
+        self._live = 0      # threads spawned and not yet exited
+        self._retire = 0    # pending cooperative-shrink tokens
+        self._done = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        self.items_done = 0
+        self.peak_workers = n_workers
+
+    # -- worker loop -------------------------------------------------------------
+    def _worker_loop(self, worker) -> None:
+        t0 = time.perf_counter()
+        try:
+            while True:
+                with self._lock:
+                    if self._retire > 0:
+                        self._retire -= 1
+                        return  # cooperative shrink: retire this thread
+                try:
+                    item = self._items.get_nowait()
+                except queue.Empty:
+                    return
+                if self.jagged and hasattr(worker, "process_jagged"):
+                    self.client.put_jagged(worker.process_jagged(item))
+                else:
+                    self.client.put(worker.process(item))
+                with self._lock:
+                    self.items_done += 1
+        except BaseException as e:
+            with self._lock:
+                self._errors.append(e)
+        finally:
+            with self._lock:
+                self._live -= 1
+            worker.stats.total_time_s += time.perf_counter() - t0
+
+    def _resize_to(self, target: int) -> None:
+        """Grow by spawning threads; shrink by issuing retirement tokens."""
+        with self._lock:
+            logical = self._live - self._retire
+            if target > logical:
+                for _ in range(target - logical):
+                    worker = self.worker_factory()
+                    th = threading.Thread(target=self._worker_loop,
+                                          args=(worker,), daemon=True)
+                    self._workers.append(worker)
+                    self._threads.append(th)
+                    self._live += 1
+                    th.start()
+            elif target < logical:
+                self._retire += logical - target
+            self.peak_workers = max(self.peak_workers, target)
+
+    def current_workers(self) -> int:
+        with self._lock:
+            return max(0, self._live - self._retire)
+
+    # -- elasticity ---------------------------------------------------------------
+    def _busy_time_total(self) -> float:
+        with self._lock:
+            workers = list(self._workers)
+        return sum(w.stats.busy_time_s for w in workers)
+
+    def _monitor_loop(self) -> None:
+        """Feed WINDOWED starvation/waste to the controller: lifetime
+        aggregates ratchet — one slow warmup step (jit compile) would read as
+        permanent starvation, growing to max_workers and never shrinking
+        (the shrink branch needs a starvation-free WINDOW, which a cumulative
+        counter can never show again after its first recorded wait)."""
+        last_starved = self.client.stats.starved_time_s
+        last_train = self.client.stats.train_time_s
+        last_busy = self._busy_time_total()
+        last_t = time.perf_counter()
+        while not self._done.wait(self.control_interval_s):
+            if self._items.empty():
+                return
+            s = self.client.stats
+            now = time.perf_counter()
+            d_starved = s.starved_time_s - last_starved
+            d_train = s.train_time_s - last_train
+            busy = self._busy_time_total()
+            d_busy = busy - last_busy
+            d_wall = (now - last_t) * max(self.current_workers(), 1)
+            last_starved, last_train, last_busy, last_t = (
+                s.starved_time_s, s.train_time_s, busy, now)
+            denom = d_starved + d_train
+            starvation = 100.0 * d_starved / denom if denom > 0 else 0.0
+            waste = max(0.0, 1.0 - d_busy / d_wall) * 100.0 if d_wall > 0 \
+                else 0.0
+            new = self.controller.decide(self.current_workers(), starvation,
+                                         waste)
+            self._resize_to(new)
+
+    # -- API ---------------------------------------------------------------------
+    def start(self, items: Sequence[List]) -> "DPPWorkerPool":
+        for item in items:
+            self._items.put(item)
+        self._resize_to(self._n_initial)
+        if self.controller is not None:
+            self._monitor = threading.Thread(target=self._monitor_loop,
+                                             daemon=True)
+            self._monitor.start()
+        return self
+
+    def _join_workers(self) -> None:
+        while True:
+            with self._lock:
+                alive = [t for t in self._threads if t.is_alive()]
+            if not alive:
+                return
+            for t in alive:
+                t.join()
+
+    @property
+    def errors(self) -> List[BaseException]:
+        with self._lock:
+            return list(self._errors)
+
+    def join(self) -> None:
+        try:
+            self._join_workers()
+            self._done.set()
+            if self._monitor is not None:
+                self._monitor.join()
+            self._join_workers()   # monitor may have spawned a final thread
+        finally:
+            # close EVEN ON worker failure: the consumer must receive the
+            # end-of-stream sentinel or it blocks forever on a dead feed
+            # (the raise below reaches join's caller, not the trainer)
+            if self.close_client:
+                self.client.close()
+        if self._errors:
+            raise RuntimeError(
+                f"{len(self._errors)} DPP worker(s) failed") from self._errors[0]
+
+    def run(self, items: Sequence[List]) -> "DPPWorkerPool":
+        """Blocking convenience: dispatch ``items``, wait, close the client.
+
+        The client's buffer must be drained concurrently (or sized to hold the
+        whole stream) or workers block on the bounded slot queue."""
+        self.start(items)
+        self.join()
+        return self
+
+    def merged_worker_stats(self):
+        """Aggregate per-thread WorkerStats into one job-level view."""
+        from repro.dpp.worker import WorkerStats
+
+        out = WorkerStats()
+        with self._lock:
+            workers = list(self._workers)
+        for w in workers:
+            s = w.stats
+            out.base_batches += s.base_batches
+            out.examples += s.examples
+            out.probe_time_s += s.probe_time_s
+            out.lookup_time_s += s.lookup_time_s
+            out.featurize_time_s += s.featurize_time_s
+            out.total_time_s += s.total_time_s
+            out.dedup_hits += s.dedup_hits
+            out.decode_cache_hits += s.decode_cache_hits
+            out.parallel_shards += s.parallel_shards
+        return out
 
 
 class StragglerAwarePool:

@@ -20,9 +20,21 @@ from repro.core import events as ev
 from repro.core.materialize import Materializer
 from repro.core.projection import TenantProjection
 from repro.core.versioning import TrainingExample
-from repro.dpp.featurize import FeatureSpec, featurize
+from repro.dpp.featurize import (
+    FeatureSpec,
+    JaggedFeatures,
+    featurize,
+    featurize_jagged,
+)
 
 ProbeFn = Callable[[int], Optional[List[TrainingExample]]]  # batch idx -> examples
+
+
+class _ProbeError:
+    """Exception captured in the probe producer thread, re-raised consumer-side."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 @dataclasses.dataclass
@@ -92,6 +104,18 @@ class DPPWorker:
     def process(self, examples: List[TrainingExample]) -> Dict[str, np.ndarray]:
         return self._featurize(examples, self._lookup(examples))
 
+    def process_jagged(self, examples: List[TrainingExample]) -> JaggedFeatures:
+        """Materialize + featurize into the arena+offsets form, skipping the
+        [B, L] densification — ``RebatchingClient.put_jagged`` scatters the
+        arena straight into the slot (one copy instead of three)."""
+        uihs = self._lookup(examples)
+        t0 = time.perf_counter()
+        out = featurize_jagged(examples, uihs, self.feature_spec)
+        self.stats.featurize_time_s += time.perf_counter() - t0
+        self.stats.base_batches += 1
+        self.stats.examples += len(examples)
+        return out
+
     def _probe(self, probe: ProbeFn, idx: int) -> Optional[List[TrainingExample]]:
         t0 = time.perf_counter()
         out = probe(idx)
@@ -116,14 +140,22 @@ class DPPWorker:
     # -- pipelined execution (paper §4.2.2) --------------------------------------
     def run_pipelined(self, probe: ProbeFn) -> Iterator[Dict[str, np.ndarray]]:
         """Overlap the immutable-store lookup for batch N with the probe-side
-        read for batch N+1 using a single prefetch thread (double buffering)."""
+        read for batch N+1 using a single prefetch thread (double buffering).
+
+        A probe failure in the producer thread is captured and re-raised here —
+        a daemon thread dying silently would otherwise leave the consumer
+        blocked on ``probe_q.get()`` forever."""
         t_start = time.perf_counter()
         probe_q: "queue.Queue" = queue.Queue(maxsize=2)
 
         def producer():
             idx = 0
             while True:
-                examples = self._probe(probe, idx)
+                try:
+                    examples = self._probe(probe, idx)
+                except BaseException as e:
+                    probe_q.put(_ProbeError(e))
+                    return
                 probe_q.put(examples)
                 if examples is None:
                     return
@@ -131,14 +163,18 @@ class DPPWorker:
 
         th = threading.Thread(target=producer, daemon=True)
         th.start()
-        while True:
-            examples = probe_q.get()
-            if examples is None:
-                break
-            uihs = self._lookup(examples)
-            yield self._featurize(examples, uihs)
-        th.join()
-        self.stats.total_time_s += time.perf_counter() - t_start
+        try:
+            while True:
+                examples = probe_q.get()
+                if isinstance(examples, _ProbeError):
+                    raise RuntimeError("probe producer failed") from examples.exc
+                if examples is None:
+                    break
+                uihs = self._lookup(examples)
+                yield self._featurize(examples, uihs)
+            th.join()
+        finally:
+            self.stats.total_time_s += time.perf_counter() - t_start
 
 
 def probe_from_list(

@@ -478,6 +478,33 @@ def _retrieval_flops(arch_id: str, cfg, n: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Device feed: host data plane -> sharded device batches
+# ---------------------------------------------------------------------------
+
+def make_device_feed(cell: Cell, source, mesh=None, depth: int = 2,
+                     prep_fn=None, stats=None, recycle_host: bool = False):
+    """Double-buffered device feed for a cell's input batches.
+
+    Wraps a host-batch source (a ``RebatchingClient``, or any iterable of
+    host batch dicts) in a ``repro.dpp.prefetch.DevicePrefetcher`` whose
+    ``device_put`` honors the cell's batch shardings: batch N+1 lands on the
+    mesh — laid out exactly as the jit'd step expects, so no resharding on
+    dispatch — while step N computes. ``prep_fn`` runs model-specific host
+    transforms inside the prefetch thread (off the trainer's critical path).
+    """
+    from jax.sharding import NamedSharding
+    from repro.dpp.prefetch import DevicePrefetcher
+
+    sharding = None
+    if mesh is not None:
+        batch_spec = cell.in_shardings[-1]
+        sharding = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            batch_spec, is_leaf=lambda x: isinstance(x, P))
+    return DevicePrefetcher(source, depth=depth, sharding=sharding,
+                            prep_fn=prep_fn, stats=stats,
+                            recycle_host=recycle_host)
+
 
 def build_cell(spec: ArchSpec, shape_name: str, mesh, use_full=True,
                cfg_override=None) -> Cell:

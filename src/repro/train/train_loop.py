@@ -33,6 +33,10 @@ class TrainerConfig:
     grad_accum: int = 1          # microbatch accumulation factor
     compress_grads: bool = False
     log_every: int = 10
+    # double-buffered device feed: issue the host->device transfer for batch
+    # N+1 while step N computes (0 disables; 2 = classic double buffering).
+    # Ignored when ``fit`` is handed an already-wrapped DevicePrefetcher.
+    prefetch_depth: int = 0
 
 
 class Trainer:
@@ -118,12 +122,29 @@ class Trainer:
     # -- full loop ---------------------------------------------------------------
     def fit(self, batches: Iterable[Dict[str, np.ndarray]],
             max_steps: Optional[int] = None) -> None:
+        from repro.dpp.prefetch import DevicePrefetcher
+
+        feed = batches
+        if self.cfg.prefetch_depth > 0 and not isinstance(feed, DevicePrefetcher):
+            feed = DevicePrefetcher(feed, depth=self.cfg.prefetch_depth)
+        # GPU-busy accounting feeds the elastic controller's starvation signal
+        record = getattr(feed, "record_train_step", None)
         t0 = time.perf_counter()
-        for batch in batches:
-            stats = self.run_step(batch)
-            if self.step % self.cfg.log_every == 0:
-                dt = time.perf_counter() - t0
-                print(f"step {self.step:5d} loss={stats['loss']:.4f} "
-                      f"gnorm={stats['grad_norm']:.3f} ({dt:.1f}s)", flush=True)
-            if max_steps and self.step >= max_steps:
-                break
+        try:
+            for batch in feed:
+                ts = time.perf_counter()
+                stats = self.run_step(batch)
+                if record is not None:
+                    record(time.perf_counter() - ts)
+                if self.step % self.cfg.log_every == 0:
+                    dt = time.perf_counter() - t0
+                    print(f"step {self.step:5d} loss={stats['loss']:.4f} "
+                          f"gnorm={stats['grad_norm']:.3f} ({dt:.1f}s)",
+                          flush=True)
+                if max_steps and self.step >= max_steps:
+                    break
+        finally:
+            # break AND exception paths: release the transfer thread and any
+            # queued device batches (idempotent; harmless on exhaustion)
+            if isinstance(feed, DevicePrefetcher):
+                feed.stop()

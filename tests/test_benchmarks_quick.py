@@ -1,0 +1,38 @@
+"""Benchmark smoke: every module in benchmarks/run.py MODULES must execute
+end-to-end at the --quick tiny config and yield well-formed BenchResults.
+
+This is what keeps the benchmark suite from rotting: an API refactor that
+breaks a benchmark module now fails tier-1 instead of surfacing months later
+in a full benchmark run. Quick-mode numbers are NOT asserted — only that the
+modules run and produce structurally valid output.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:  # make `benchmarks.*` importable
+    sys.path.insert(0, str(REPO_ROOT))
+
+from benchmarks import run as bench_run  # noqa: E402
+from benchmarks.common import BenchResult  # noqa: E402
+
+
+def test_modules_list_complete():
+    listed = {m.rsplit(".", 1)[1] for m in bench_run.MODULES}
+    on_disk = {p.stem for p in (REPO_ROOT / "benchmarks").glob("*.py")
+               if p.stem not in ("run", "common", "__init__",
+                                 "roofline_report")}
+    assert on_disk <= listed, f"benchmark modules not in MODULES: {on_disk - listed}"
+
+
+@pytest.mark.parametrize("modname", bench_run.MODULES,
+                         ids=[m.rsplit(".", 1)[1] for m in bench_run.MODULES])
+def test_benchmark_quick(modname):
+    results = bench_run.run_module(modname, quick=True)
+    assert isinstance(results, list) and results, modname
+    for r in results:
+        assert isinstance(r, BenchResult)
+        assert r.name and isinstance(r.derived, dict)
+        r.csv()  # the CSV line must render

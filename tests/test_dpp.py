@@ -12,6 +12,7 @@ from repro.core.simulation import ProductionSim, SimConfig
 from repro.dpp.affinity import plan_affine, plan_arrival_order
 from repro.dpp.client import RebatchingClient
 from repro.dpp.elastic import (
+    DPPWorkerPool,
     ElasticConfig,
     ElasticController,
     StragglerAwarePool,
@@ -161,6 +162,89 @@ def test_pool_survives_worker_exception():
     assert out == [42]
     assert pool.stats.worker_failures == 1
     pool.shutdown()
+
+
+def test_worker_pool_single_worker_matches_serial(sim):
+    """One pool worker over planned items == the serial put loop, batch for
+    batch (the pool adds no reordering of its own at concurrency 1)."""
+    items = [sim.examples[i : i + 6] for i in range(0, 48, 6)]
+
+    serial = RebatchingClient(16, buffer_batches=64, shuffle_seed=3)
+    w = DPPWorker(sim.materializer(validate_checksum=False), PROJ, SPEC,
+                  sim.schema)
+    for item in items:
+        serial.put_jagged(w.process_jagged(item))
+    serial.close()
+    want = list(serial)
+
+    pooled = RebatchingClient(16, buffer_batches=64, shuffle_seed=3)
+    pool = DPPWorkerPool(
+        lambda: DPPWorker(sim.materializer(validate_checksum=False), PROJ,
+                          SPEC, sim.schema),
+        pooled, n_workers=1)
+    pool.run(items)
+    got = list(pooled)
+    assert len(got) == len(want)
+    for g, w_ in zip(got, want):
+        for k in w_:
+            np.testing.assert_array_equal(g[k], w_[k], err_msg=k)
+    assert pool.items_done == len(items)
+    assert pool.merged_worker_stats().examples == 48
+
+
+def test_worker_pool_parallel_covers_all_examples(sim):
+    items = [sim.examples[i : i + 5] for i in range(0, len(sim.examples), 5)]
+    client = RebatchingClient(8, buffer_batches=1024, shuffle_seed=0)
+    pool = DPPWorkerPool(
+        lambda: DPPWorker(sim.materializer(validate_checksum=False), PROJ,
+                          SPEC, sim.schema),
+        client, n_workers=4,
+        controller=ElasticController(ElasticConfig(min_workers=1,
+                                                   max_workers=6)),
+        control_interval_s=0.01)
+    pool.run(items)
+    got_users = []
+    for b in client:
+        got_users.extend(b["user_id"].tolist())
+    assert sorted(got_users) == sorted(e.user_id for e in sim.examples)
+    assert pool.merged_worker_stats().examples == len(sim.examples)
+
+
+def test_worker_pool_propagates_worker_failure(sim):
+    class Exploding:
+        def __init__(self):
+            from repro.dpp.worker import WorkerStats
+            self.stats = WorkerStats()
+
+        def process_jagged(self, item):
+            raise RuntimeError("worker blew up")
+
+    client = RebatchingClient(8, buffer_batches=64, shuffle_seed=0)
+    pool = DPPWorkerPool(Exploding, client, n_workers=2)
+    with pytest.raises(RuntimeError):
+        pool.run([sim.examples[:4]])
+
+
+def test_make_device_feed_places_cell_batches(sim):
+    """launch.steps.make_device_feed: device batches come back resident and
+    shaped per the cell's batch spec."""
+    from repro.configs import dlrm_uih as DU
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import build_cell, make_device_feed
+
+    spec = DU.spec()
+    mesh = make_test_mesh(1)
+    cell = build_cell(spec, "train_batch", mesh, use_full=False)
+    bspec = cell.args_spec[-1]
+    rng = np.random.default_rng(0)
+    host = [{k: np.asarray(rng.integers(0, 2, s.shape)).astype(s.dtype)
+             for k, s in bspec.items()} for _ in range(3)]
+    feed = make_device_feed(cell, host, mesh=mesh, depth=2)
+    out = list(feed)
+    assert len(out) == 3
+    for db in out:
+        for k, s in bspec.items():
+            assert db[k].shape == s.shape and db[k].dtype == s.dtype
 
 
 def test_affinity_plan_reduces_fanout_and_amortizes(sim):

@@ -1,0 +1,394 @@
+"""Golden-equality tests for the zero-copy trainer feed (ISSUE 2).
+
+The vectorized featurizer, the fused jagged->slot placement, and the
+write-time-permuted reshuffle must be BYTE-identical to the seed
+implementations (kept as ``*_reference`` / ``merge_base_batches`` +
+``reshuffle``) across the edge cases: empty sequences, over-length
+truncation, ``left_align=True``, mixed trait dtypes, traits missing from
+some examples, and the remainder flush on ``close()``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.dpp.client import RebatchingClient
+from repro.dpp.featurize import (
+    FeatureSpec,
+    featurize,
+    featurize_jagged,
+    featurize_reference,
+    merge_base_batches,
+    pad_sequences,
+    pad_sequences_reference,
+    reshuffle,
+)
+from repro.dpp.prefetch import DevicePrefetcher
+from repro.dpp.worker import DPPWorker, probe_from_list
+from repro.core.versioning import TrainingExample
+
+
+def assert_batch_equal(got, want):
+    assert list(got.keys()) == list(want.keys())
+    for k in want:
+        assert got[k].dtype == want[k].dtype, k
+        assert got[k].shape == want[k].shape, k
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# pad_sequences / featurize golden equality
+# ---------------------------------------------------------------------------
+
+def _random_seqs(rng, b, max_len, dtypes=(np.int64,)):
+    return [rng.integers(0, 1000, size=int(rng.integers(0, max_len))).astype(
+        rng.choice(dtypes)) for _ in range(b)]
+
+
+@pytest.mark.parametrize("left_align", [False, True])
+def test_pad_sequences_golden(left_align):
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        b = int(rng.integers(0, 10))
+        seq_len = int(rng.integers(1, 16))
+        seqs = _random_seqs(rng, b, 3 * seq_len,
+                            dtypes=(np.int64, np.int32, np.float32, np.int8))
+        got = pad_sequences(seqs, seq_len, left_align=left_align)
+        want = pad_sequences_reference(seqs, seq_len, left_align=left_align)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_pad_sequences_golden_edge_cases():
+    # empty batch, all-empty seqs, exact-length, over-length, dtype override
+    for seqs, kw in [
+        ([], {}),
+        ([np.zeros(0, np.int32)] * 3, {}),
+        ([np.arange(5)], {}),
+        ([np.arange(50)], {}),
+        ([np.arange(4, dtype=np.float64) + 0.7], {"dtype": np.int64}),
+        ([np.arange(3), np.zeros(0, np.int64), np.arange(10)], {"left_align": True}),
+    ]:
+        got = pad_sequences(seqs, 5, **kw)
+        want = pad_sequences_reference(seqs, 5, **kw)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def _synth_batch(rng, b, seq_len, drop_trait_at=()):
+    """Examples + UIHs with mixed trait dtypes; some examples missing traits."""
+    traits = {"item_id": np.int64, "action": np.int32, "flag": np.int8,
+              "score": np.float32}
+    exs, uihs = [], []
+    for i in range(b):
+        n = int(rng.integers(0, 3 * seq_len))
+        u = {"timestamp": np.sort(rng.integers(0, 10_000, n)).astype(np.int64)}
+        for t, dt in traits.items():
+            u[t] = rng.integers(0, 100, n).astype(dt)
+        if i in drop_trait_at:
+            u.pop("flag")
+        uihs.append(u)
+        exs.append(TrainingExample(
+            request_id=i, user_id=int(rng.integers(0, 50)),
+            request_ts=10_000 + i, label_ts=0,
+            candidate={"item_id": int(rng.integers(0, 100))},
+            labels={"click": float(rng.random() < 0.3)}))
+    return exs, uihs
+
+
+SPEC = FeatureSpec(seq_len=7, uih_traits=("item_id", "action", "flag", "score"),
+                   candidate_fields=("item_id",), label_fields=("click",))
+
+
+def test_featurize_golden():
+    rng = np.random.default_rng(1)
+    for trial in range(25):
+        b = int(rng.integers(0, 12))
+        drop = tuple(int(x) for x in rng.integers(0, max(b, 1), 2)) \
+            if trial % 3 == 0 else ()
+        exs, uihs = _synth_batch(rng, b, SPEC.seq_len, drop_trait_at=drop)
+        assert_batch_equal(featurize(exs, uihs, SPEC),
+                           featurize_reference(exs, uihs, SPEC))
+
+
+def test_featurize_golden_all_empty_sequences():
+    rng = np.random.default_rng(2)
+    exs, uihs = _synth_batch(rng, 4, SPEC.seq_len)
+    uihs = [{k: v[:0] for k, v in u.items()} for u in uihs]
+    assert_batch_equal(featurize(exs, uihs, SPEC),
+                       featurize_reference(exs, uihs, SPEC))
+
+
+def test_featurize_jagged_layout_matches_dense():
+    """offsets/arena form must densify to the same batch (kernel contract)."""
+    rng = np.random.default_rng(3)
+    exs, uihs = _synth_batch(rng, 9, SPEC.seq_len)
+    jf = featurize_jagged(exs, uihs, SPEC)
+    assert jf.offsets.shape == (10,)
+    assert int(jf.offsets[-1]) == len(jf.values["item_id"])
+    assert (np.diff(jf.offsets) <= SPEC.seq_len).all()  # clipped to budget
+    assert_batch_equal(jf.to_padded(), featurize_reference(exs, uihs, SPEC))
+
+
+# ---------------------------------------------------------------------------
+# Slot rebatching golden equality (fused reshuffle + remainder flush)
+# ---------------------------------------------------------------------------
+
+def seed_rebatch_reference(bases, full, seed):
+    """The seed client's semantics: arrival-order concat merge, exact-size
+    emission reshuffled with seed+k, remainder flushed (reshuffled) at close."""
+    out, k = [], 0
+    cat = merge_base_batches(bases)
+    n = len(next(iter(cat.values())))
+    for lo in range(0, n - full + 1, full):
+        b = {kk: v[lo : lo + full] for kk, v in cat.items()}
+        out.append(reshuffle(b, seed + k) if seed is not None else b)
+        k += 1
+    if n % full:
+        tail = {kk: v[n - n % full :] for kk, v in cat.items()}
+        out.append(reshuffle(tail, seed + k) if seed is not None else tail)
+    return out
+
+
+def _base_batches(rng, spec, n_bases, rows_hi, seq_len):
+    bases = []
+    for _ in range(n_bases):
+        b = int(rng.integers(1, rows_hi))
+        exs, uihs = _synth_batch(rng, b, seq_len)
+        bases.append((exs, uihs))
+    return bases
+
+
+@pytest.mark.parametrize("shuffle_seed", [None, 0, 7])
+@pytest.mark.parametrize("full", [4, 16, 21])
+def test_slot_rebatch_golden(shuffle_seed, full):
+    rng = np.random.default_rng(4)
+    chunks = _base_batches(rng, SPEC, 9, 2 * full + 1, SPEC.seq_len)
+    dense = [featurize_reference(e, u, SPEC) for e, u in chunks]
+    want = seed_rebatch_reference(dense, full, shuffle_seed)
+
+    # dense put path
+    c = RebatchingClient(full, buffer_batches=1024, shuffle_seed=shuffle_seed)
+    for e, u in chunks:
+        c.put(featurize(e, u, SPEC))
+    c.close()
+    got = list(c)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert_batch_equal(g, w)
+
+    # fused jagged put path
+    cj = RebatchingClient(full, buffer_batches=1024, shuffle_seed=shuffle_seed)
+    for e, u in chunks:
+        cj.put_jagged(featurize_jagged(e, u, SPEC))
+    cj.close()
+    got_j = list(cj)
+    assert len(got_j) == len(want)
+    for g, w in zip(got_j, want):
+        assert_batch_equal(g, w)
+
+
+def test_slot_rebatch_remainder_flush_on_close():
+    """The epoch tail (fewer rows than a full batch) must be emitted as a
+    short batch, reshuffled over its ACTUAL length like the seed path."""
+    rng = np.random.default_rng(5)
+    exs, uihs = _synth_batch(rng, 10, SPEC.seq_len)
+    base = featurize_reference(exs, uihs, SPEC)
+    want = seed_rebatch_reference([base], 16, 3)
+    assert len(want) == 1 and len(want[0]["user_id"]) == 10
+
+    c = RebatchingClient(16, shuffle_seed=3)
+    c.put_jagged(featurize_jagged(exs, uihs, SPEC))
+    c.close()
+    got = list(c)
+    assert len(got) == 1
+    assert_batch_equal(got[0], want[0])
+
+
+def test_slot_recycling_reuses_storage_and_stays_identical():
+    rng = np.random.default_rng(6)
+    full = 8
+    chunks = _base_batches(rng, SPEC, 12, 6, SPEC.seq_len)
+    dense = [featurize_reference(e, u, SPEC) for e, u in chunks]
+    want = seed_rebatch_reference(dense, full, 0)
+
+    c = RebatchingClient(full, buffer_batches=2, shuffle_seed=0)
+    got = []
+
+    def consume():
+        while True:
+            b = c.get_full_batch()
+            if b is None:
+                return
+            got.append({k: v.copy() for k, v in b.items()})
+            c.recycle(b)  # hand storage back for reuse
+
+    th = threading.Thread(target=consume)
+    th.start()
+    for e, u in chunks:
+        c.put_jagged(featurize_jagged(e, u, SPEC))
+    c.close()
+    th.join()
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert_batch_equal(g, w)
+    assert c.stats.slot_reuses > 0
+
+
+def test_mixed_put_and_put_jagged_interoperate():
+    rng = np.random.default_rng(7)
+    chunks = _base_batches(rng, SPEC, 6, 9, SPEC.seq_len)
+    dense = [featurize_reference(e, u, SPEC) for e, u in chunks]
+    want = seed_rebatch_reference(dense, 8, 1)
+    c = RebatchingClient(8, buffer_batches=1024, shuffle_seed=1)
+    for i, (e, u) in enumerate(chunks):
+        if i % 2:
+            c.put(featurize(e, u, SPEC))
+        else:
+            c.put_jagged(featurize_jagged(e, u, SPEC))
+    c.close()
+    got = list(c)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert_batch_equal(g, w)
+
+
+def test_concurrent_producers_preserve_all_rows():
+    """Placement copies run outside the client lock (span reservation); under
+    producer contention every row must land exactly once, in every batch."""
+    full = 32
+    n_threads, per_thread = 4, 30
+    c = RebatchingClient(full, buffer_batches=10_000, shuffle_seed=11)
+    rng = np.random.default_rng(9)
+    payloads = [[rng.integers(1, 1 << 30, (int(rng.integers(1, 13)),)
+                              ).astype(np.int64)
+                 for _ in range(per_thread)] for _ in range(n_threads)]
+
+    def producer(mine):
+        for arr in mine:
+            c.put({"x": arr, "tag": arr * 3 + 1})
+
+    threads = [threading.Thread(target=producer, args=(p,)) for p in payloads]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    c.close()
+    got_x, got_tag = [], []
+    for b in c:
+        got_x.extend(b["x"].tolist())
+        got_tag.extend(b["tag"].tolist())
+    want = sorted(int(v) for p in payloads for a in p for v in a)
+    assert sorted(got_x) == want                      # nothing lost/duplicated
+    assert [t == x * 3 + 1 for x, t in zip(got_x, got_tag)].count(False) == 0
+
+
+def test_schema_drift_put_raises_and_close_does_not_hang():
+    """A mid-stream base batch with mismatched keys must raise (the seed
+    concat path did too), poison its slot rather than emit a half-written
+    batch, and leave the client usable: close() terminates and later puts
+    land on a fresh slot."""
+    c = RebatchingClient(8, buffer_batches=16, shuffle_seed=0)
+    c.put({"a": np.arange(4), "b": np.arange(4.0)})
+    with pytest.raises(KeyError):
+        c.put({"a": np.arange(4)})        # missing key "b"
+    c.put({"a": np.arange(4), "b": np.arange(4.0)})
+    c.close()                              # must not hang on leaked writers
+    out = list(c)
+    assert [len(b["a"]) for b in out] == [4]   # only the fresh slot's tail
+
+
+# ---------------------------------------------------------------------------
+# Starvation accounting (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_starvation_not_inflated_by_timeouts_or_drain():
+    c = RebatchingClient(4, shuffle_seed=None)
+    assert c.get_full_batch(timeout=0.02) is None     # timeout: no delivery
+    assert c.stats.starved_time_s == 0.0
+    c.put({"a": np.arange(4)})
+    assert c.get_full_batch(timeout=1.0) is not None  # delivered: counted
+    starved_after_delivery = c.stats.starved_time_s
+    assert starved_after_delivery > 0.0
+    c.close()
+    assert c.get_full_batch() is None                 # end-of-stream sentinel
+    assert c.get_full_batch(timeout=0.02) is None     # post-drain poll
+    assert c.stats.starved_time_s == starved_after_delivery
+    assert c.stats.full_batches == 1
+
+
+# ---------------------------------------------------------------------------
+# Pipelined probe error propagation (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_run_pipelined_reraises_producer_exception(monkeypatch):
+    class Boom(RuntimeError):
+        pass
+
+    def probe(idx):
+        if idx == 2:
+            raise Boom("probe died")
+        return [] if idx < 2 else None
+
+    # worker whose lookup/featurize do nothing (probe fails before use)
+    w = DPPWorker.__new__(DPPWorker)
+    w.probe_latency_s = 0.0
+    from repro.dpp.worker import WorkerStats
+    w.stats = WorkerStats()
+    w._lookup = lambda examples: []
+    w._featurize = lambda examples, uihs: {"n": np.zeros(0)}
+
+    with pytest.raises(RuntimeError) as ei:
+        list(w.run_pipelined(probe))
+    assert isinstance(ei.value.__cause__, Boom)
+
+
+# ---------------------------------------------------------------------------
+# Device prefetcher
+# ---------------------------------------------------------------------------
+
+def test_device_prefetcher_preserves_stream_and_splits_starvation():
+    full = 4
+    c = RebatchingClient(full, buffer_batches=64, shuffle_seed=0)
+    rng = np.random.default_rng(8)
+    rows = [rng.integers(0, 100, (full, 3)).astype(np.int64) for _ in range(5)]
+    for r in rows:
+        c.put({"x": r})
+    c.close()
+    want = list(seed_rebatch_reference([{"x": r} for r in rows], full, 0))
+
+    pf = DevicePrefetcher(c, depth=2,
+                          prep_fn=lambda b: {"x": b["x"] * 2})
+    got = [np.asarray(b["x"]) for b in pf]
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w["x"] * 2)
+    s = c.stats
+    assert s.full_batches == len(want)
+    assert s.h2d_time_s > 0.0
+    # the starved split must account the total
+    assert s.starved_host_s + s.starved_h2d_s == pytest.approx(
+        s.starved_time_s, rel=1e-6, abs=1e-9)
+
+
+def test_device_prefetcher_propagates_source_errors():
+    c = RebatchingClient(2, shuffle_seed=None)
+    c.put({"a": np.arange(2)})
+
+    def bad_prep(b):
+        raise ValueError("prep exploded")
+
+    pf = DevicePrefetcher(c, prep_fn=bad_prep)
+    with pytest.raises(RuntimeError) as ei:
+        pf.get()
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+def test_device_prefetcher_wraps_plain_iterables():
+    batches = [{"x": np.full((2, 2), i)} for i in range(4)]
+    pf = DevicePrefetcher(iter(batches), depth=1)
+    got = [np.asarray(b["x"]) for b in pf]
+    assert len(got) == 4
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g, np.full((2, 2), i))
