@@ -9,7 +9,7 @@ These checks back the paper's correctness argument:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -79,12 +79,45 @@ def audit(
     else:
         outputs = (materializer.materialize(e, projection) for e in examples)
     for (exm, ref), got in zip(zip(examples, references), outputs):
-        want = project_reference(ref, projection, schema)
-        report.examples += 1
-        if not batches_equal(got, want):
-            report.o2o_mismatches += 1
-        leaks = future_leakage_count(got, exm.request_ts)
-        if leaks:
-            report.leaked_examples += 1
-            report.leaked_events += leaks
+        _check_one(report, exm, ref, got, projection, schema)
+    return report
+
+
+def _check_one(report, exm, ref, got, projection, schema) -> None:
+    want = project_reference(ref, projection, schema)
+    report.examples += 1
+    if not batches_equal(got, want):
+        report.o2o_mismatches += 1
+    leaks = future_leakage_count(got, exm.request_ts)
+    if leaks:
+        report.leaked_examples += 1
+        report.leaked_events += leaks
+
+
+def audit_streaming(
+    micro_batches: Iterable[Sequence[TrainingExample]],
+    references_by_id: Dict[int, ev.EventBatch],
+    materializer: Materializer,
+    schema: ev.TraitSchema,
+    projection: Optional[TenantProjection] = None,
+    ack: Optional[Callable[[Sequence[TrainingExample]], None]] = None,
+) -> AuditReport:
+    """Streaming-mode audit (§3.2): materialize micro-batches AS THEY ARRIVE —
+    compaction may publish new generations between (or during) micro-batches,
+    which is exactly the condition the bifurcated protocol must survive.
+
+    ``micro_batches`` is typically ``StreamingSource.micro_batches()`` running
+    against a live stream; ``references_by_id`` maps ``request_id`` to the
+    inference-time ground truth (stream consumption interleaves users, so
+    positional pairing is not available); ``ack`` (e.g. ``StreamingSource.ack``)
+    releases the examples' generation leases after each audited micro-batch —
+    the audit then also exercises lease GC under churn."""
+    report = AuditReport()
+    for mb in micro_batches:
+        outputs = materializer.materialize_batch(list(mb), projection)
+        for exm, got in zip(mb, outputs):
+            _check_one(report, exm, references_by_id[exm.request_id], got,
+                       projection, schema)
+        if ack is not None:
+            ack(mb)
     return report

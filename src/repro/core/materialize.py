@@ -12,6 +12,24 @@ Given a logged training example, the materializer:
 The logic depends only on the logged metadata, never on the training paradigm,
 so streaming and batch training share it unchanged (§3.2).
 
+**Stale-generation remediation** (bifurcated protocol, §3.2): an example may
+reference an immutable generation that daily compaction has since superseded.
+Resolution is layered:
+
+  1. *pinned* (``pin_generations=True``, the streaming path): if the example's
+     generation is still retained by a ``GenerationLease``, scan it directly —
+     byte-exact reproduction even if the new generation scrubbed history;
+  2. *re-resolve*: otherwise scan the LIVE generation with the version's
+     ``end_ts`` clamp (compaction rebuilds the full lookback window, so the
+     clamped scan reproduces the window and can never admit post-request
+     events) and **revalidate the checksum** — in pinning mode this
+     revalidation is mandatory for stale windows regardless of
+     ``validate_checksum``;
+  3. a revalidation mismatch on a stale window raises ``StaleGeneration``
+     (a ``ChecksumMismatch`` subclass) in strict mode — the window genuinely
+     changed (e.g. right-to-delete scrub) and the example must be dropped,
+     not silently trained on drifted history.
+
 Batch materialization is *planned* (§4.1.2, §4.2.3): ``materialize_batch``
 groups the batch's examples by *window key* — ``(user_id, end_ts, seq_len,
 checksum, generation, projection)`` pins the immutable window's exact content
@@ -36,7 +54,12 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.projection import TenantProjection
 from repro.core.versioning import TrainingExample, window_checksum
-from repro.storage.immutable_store import ImmutableUIHStore, IOStats, ScanRequest
+from repro.storage.immutable_store import (
+    GenerationUnavailable,
+    ImmutableUIHStore,
+    IOStats,
+    ScanRequest,
+)
 
 
 def _projection_fingerprint(projection: Optional[TenantProjection]):
@@ -61,9 +84,10 @@ class ChecksumMismatch(RuntimeError):
     pass
 
 
-class StaleGeneration(RuntimeError):
-    """The example references an immutable generation whose window is no longer
-    reconstructible (e.g. right-to-delete scrubs changed the event set)."""
+class StaleGeneration(ChecksumMismatch):
+    """The example references a superseded immutable generation whose window is
+    no longer reconstructible from the live generation (e.g. right-to-delete
+    scrubs changed the event set) and is no longer lease-retained."""
 
 
 @dataclasses.dataclass
@@ -75,6 +99,11 @@ class MaterializeStats:
     mutable_events: int = 0
     window_cache_hits: int = 0   # cross-batch LRU hits (no store round-trip)
     windows_fetched: int = 0     # unique windows fetched from the store
+    # stale-generation remediation (bifurcated protocol)
+    pinned_windows: int = 0      # served byte-exact from a lease-retained gen
+    stale_reresolved: int = 0    # stale windows re-resolved against the live gen
+    stale_failures: int = 0      # re-resolved windows whose checksum mismatched
+    pin_misses: int = 0          # pinning requested but the gen was already GC'd
 
 
 class Materializer:
@@ -85,11 +114,16 @@ class Materializer:
         validate_checksum: bool = False,
         strict: bool = True,
         window_cache_size: int = 0,
+        pin_generations: bool = False,
     ):
         self.immutable = immutable
         self.schema = schema
         self.validate_checksum = validate_checksum
         self.strict = strict
+        # Streaming-protocol mode: scan the example's logged generation while a
+        # lease retains it (byte-exact); stale windows that must fall back to
+        # the live generation are ALWAYS checksum-revalidated.
+        self.pin_generations = pin_generations
         self.stats = MaterializeStats()
         # THIS materializer's store traffic. The store's own ``stats`` is
         # shared by every client, so concurrent workers cannot attribute
@@ -148,29 +182,62 @@ class Materializer:
         # 2) resolve each unique window: cross-batch LRU first, else collect
         #    canonicalized requests for one planned store round-trip
         windows: dict = {}
-        reqs: List[ScanRequest] = []
-        fetch_spans: List[Tuple[tuple, TrainingExample, int, int]] = []
+        to_fetch: List[Tuple[tuple, TrainingExample, int]] = []  # key, rep, n_members
         for key, idxs in members.items():
             cached = self._window_cache_get(key)
             if cached is not None:
                 self.stats.window_cache_hits += 1
                 windows[key] = cached
                 continue
-            rep = examples[idxs[0]]
-            canonical = self._requests_for(rep, projection)
-            lo = len(reqs)
-            # one canonicalized request tuple PER member example: the plan
-            # covers example × group and the store dedupes (IOStats.dedup_hits)
-            for _ in idxs:
-                reqs.extend(canonical)
-            fetch_spans.append((key, rep, lo, lo + len(canonical)))
+            to_fetch.append((key, examples[idxs[0]], len(idxs)))
 
-        # 3) single store round-trip for all missing windows
-        if reqs:
-            parts = self.immutable.multi_range_scan(reqs, self.io_stats)
-            for key, rep, lo, hi in fetch_spans:
+        # 3) single store round-trip for all missing windows (with pin-race
+        #    retry: a pinned generation's last lease can release between the
+        #    availability check and the scan — demote ONLY the vanished
+        #    windows to live re-resolution, so a still-leased sibling window
+        #    keeps its byte-exact pinned service). The per-window decision is
+        #    resolved once (counting each pin miss exactly once) and only
+        #    demoted on retries, never re-derived.
+        gens: dict = {key: self._window_generation(rep)
+                      for key, rep, _ in to_fetch}
+
+        def collect():
+            reqs: List[ScanRequest] = []
+            spans: List[Tuple[tuple, TrainingExample, int, int, int]] = []
+            for key, rep, n_members in to_fetch:
+                gen = gens[key]
+                canonical = self._requests_for(rep, projection, gen)
+                lo = len(reqs)
+                # one canonicalized request tuple PER member example: the plan
+                # covers example × group, the store dedupes (IOStats.dedup_hits)
+                for _ in range(n_members):
+                    reqs.extend(canonical)
+                spans.append((key, rep, lo, lo + len(canonical), gen))
+            return reqs, spans
+
+        if to_fetch:
+            while True:
+                reqs, fetch_spans = collect()
+                try:
+                    parts = self.immutable.multi_range_scan(reqs, self.io_stats)
+                    break
+                except GenerationUnavailable:
+                    demoted = False
+                    for key in gens:
+                        if (gens[key] >= 0
+                                and not self.immutable.has_generation(gens[key])):
+                            gens[key] = -1
+                            self.stats.pin_misses += 1
+                            demoted = True
+                    if not demoted:
+                        # cannot identify the vanished generation (it came
+                        # back? paradoxical race) — force everything live to
+                        # guarantee termination; live scans never raise
+                        for key in gens:
+                            gens[key] = -1
+            for key, rep, lo, hi, gen in fetch_spans:
                 imm = self._join_groups(parts[lo:hi])
-                self._maybe_check(rep, imm, projection)
+                self._maybe_check(rep, imm, projection, gen)
                 self.stats.windows_fetched += 1
                 windows[key] = imm
                 self._window_cache_put(key, imm)
@@ -214,8 +281,24 @@ class Materializer:
         while len(self._window_cache) > self.window_cache_size:
             self._window_cache.popitem(last=False)
 
+    def _window_generation(self, example: TrainingExample) -> int:
+        """Resolve which generation serves this example's window: the logged
+        generation while a lease retains it (pinning mode), else -1 = live
+        re-resolve (remediation)."""
+        meta = example.version
+        assert meta is not None
+        if not self.pin_generations or meta.generation < 0:
+            return -1
+        if self.immutable.has_generation(meta.generation):
+            return meta.generation
+        self.stats.pin_misses += 1
+        return -1
+
     def _requests_for(
-        self, example: TrainingExample, projection: Optional[TenantProjection]
+        self,
+        example: TrainingExample,
+        projection: Optional[TenantProjection],
+        generation: int = -1,
     ) -> List[ScanRequest]:
         """One ScanRequest per feature group for the example's window.
 
@@ -240,6 +323,7 @@ class Materializer:
                 end_ts=meta.end_ts,
                 max_events=meta.seq_len if max_events < 0 else max_events,
                 traits=None if projection is None else projection.traits_for(self.schema, g),
+                generation=generation,
             )
             for g in groups
         ]
@@ -247,10 +331,18 @@ class Materializer:
     def _fetch_immutable(
         self, example: TrainingExample, projection: Optional[TenantProjection]
     ) -> ev.EventBatch:
-        parts = self.immutable.multi_range_scan(
-            self._requests_for(example, projection), self.io_stats)
+        gen = self._window_generation(example)
+        try:
+            parts = self.immutable.multi_range_scan(
+                self._requests_for(example, projection, gen), self.io_stats)
+        except GenerationUnavailable:
+            # pinned generation GC'd between check and scan: remediate live
+            self.stats.pin_misses += 1
+            gen = -1
+            parts = self.immutable.multi_range_scan(
+                self._requests_for(example, projection, gen), self.io_stats)
         imm = self._join_groups(parts)
-        self._maybe_check(example, imm, projection)
+        self._maybe_check(example, imm, projection, gen)
         self.stats.windows_fetched += 1
         return imm
 
@@ -259,15 +351,32 @@ class Materializer:
         example: TrainingExample,
         imm: ev.EventBatch,
         projection: Optional[TenantProjection],
+        used_generation: int = -1,
     ) -> None:
         """Checksum-validate iff the full window was fetched (a projected
-        fetch can legitimately differ from the snapshot-time window)."""
+        fetch can legitimately differ from the snapshot-time window).
+
+        ``used_generation``: the generation the window was actually scanned
+        from. A window served pinned is byte-exact by construction; a STALE
+        window re-resolved against the live generation is the remediation
+        path, and in pinning mode its revalidation is mandatory."""
         meta = example.version
         assert meta is not None
+        # examples logged before the first compaction (generation -1) have no
+        # generation to go stale — there was never a pinned window
+        stale = (meta.generation >= 0
+                 and meta.generation != self.immutable.generation)
+        pinned = used_generation >= 0 and stale
+        if pinned:
+            self.stats.pinned_windows += 1
+        elif stale:
+            self.stats.stale_reresolved += 1
+        must_validate = self.validate_checksum or (
+            self.pin_generations and stale and not pinned)
         max_events = -1 if projection is None else projection.seq_len
-        if (self.validate_checksum and meta.checksum
+        if (must_validate and meta.checksum
                 and self._wants_full_window(projection, meta.seq_len, max_events)):
-            self._check(example, imm, meta)
+            self._check(example, imm, meta, stale=stale and not pinned)
 
     def _wants_full_window(self, projection, snap_len: int, max_events: int) -> bool:
         return projection is None or max_events >= snap_len
@@ -288,7 +397,8 @@ class Materializer:
             joined.update(p)
         return joined
 
-    def _check(self, example, immutable_part: ev.EventBatch, meta) -> None:
+    def _check(self, example, immutable_part: ev.EventBatch, meta,
+               stale: bool = False) -> None:
         need = {"timestamp", "item_id"}
         if not need <= set(immutable_part):
             return  # projection dropped identity columns; cannot validate
@@ -296,11 +406,16 @@ class Materializer:
         got = window_checksum(immutable_part)
         if got != meta.checksum or ev.batch_len(immutable_part) != meta.seq_len:
             self.stats.checksum_failures += 1
+            if stale:
+                self.stats.stale_failures += 1
             if self.strict:
-                raise ChecksumMismatch(
+                exc = StaleGeneration if stale else ChecksumMismatch
+                raise exc(
                     f"request {example.request_id}: immutable window changed "
                     f"(gen {meta.generation} -> {self.immutable.generation}); "
                     f"len {meta.seq_len} -> {ev.batch_len(immutable_part)}"
+                    + ("; re-resolution against the live generation could not "
+                       "reproduce the logged window" if stale else "")
                 )
 
     def _concat_and_project(

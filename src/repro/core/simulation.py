@@ -16,6 +16,7 @@ request time) and by the Table-1/Fig-2 benchmarks (byte accounting).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -45,6 +46,12 @@ class SimConfig:
     n_buckets: int = 8
     mode: str = "vlm"  # "vlm" | "fatrow"
     seed: int = 0
+    # Bifurcated-protocol generation pinning: published stream examples hold a
+    # lease on the generation their version metadata references until a
+    # streaming consumer acks them (repro.streaming). Opt-in: batch-only
+    # workloads never ack, so pinning would retain one superseded generation
+    # per compaction cycle for the whole run.
+    pin_generations: bool = False
 
 
 class ProductionSim:
@@ -63,12 +70,19 @@ class ProductionSim:
         self.snapshotter: BaseSnapshotter = snap_cls(
             self.mutable, self.immutable, self.schema, snap_cfg
         )
-        self.stream = TrainingExampleStream(self.schema, capacity=1 << 20)
+        self.stream = TrainingExampleStream(
+            self.schema, capacity=1 << 20,
+            lease_manager=self.immutable if cfg.pin_generations else None)
         self.warehouse = Warehouse(self.schema, n_buckets=cfg.n_buckets)
         self.examples: List[TrainingExample] = []
         self.references: List[ev.EventBatch] = []  # inference-time ground truth
         self._rng = np.random.default_rng(cfg.seed)
         self.current_day = -1
+        # the compaction pipeline is a singleton in production; serializing it
+        # here keeps generation-id allocation race-free when stress tests run
+        # extra compaction churn concurrently with the daily cycle
+        self._compaction_lock = threading.Lock()
+        self.compaction_watermark = -1   # monotone: never regresses
         # optional: label_fn(inference_uih, candidate, rng) -> labels dict,
         # letting benchmarks synthesize labels that depend on long history
         self.label_fn = None
@@ -78,12 +92,27 @@ class ProductionSim:
         hist = self.events.history_until(user_id, t_hi)
         return ev.time_slice(hist, t_lo, t_hi)
 
-    def run_compaction(self, as_of_ts: int, scrub: Optional[ScrubFn] = None):
+    def run_compaction(self, as_of_ts: int, scrub: Optional[ScrubFn] = None,
+                       evict: bool = True):
+        """One compaction cycle: rebuild + bulk-load a new generation, then
+        (optionally) evict the consolidated prefix from the mutable tier.
+        ``evict=False`` is for re-compactions at an ALREADY-evicted watermark
+        (generation churn): logically a no-op eviction, skipping it avoids
+        rewriting chunk lists under concurrent ingestion."""
         users = range(self.cfg.stream.n_users)
-        report = self.compactor.run(
-            self._source_of_truth, list(users), as_of_ts, self.immutable, scrub=scrub
-        )
-        self.mutable.evict_all_until(as_of_ts)
+        with self._compaction_lock:
+            # watermark monotonicity: a re-run (or concurrent churn cycle) at
+            # a stale watermark must not REGRESS the serving watermark — the
+            # mutable tier has already evicted up to the established one, so a
+            # regressed generation would lose the gap for every new snapshot
+            as_of_ts = max(as_of_ts, self.compaction_watermark)
+            report = self.compactor.run(
+                self._source_of_truth, list(users), as_of_ts, self.immutable,
+                scrub=scrub
+            )
+            self.compaction_watermark = as_of_ts
+            if evict:
+                self.mutable.evict_all_until(as_of_ts)
         return report
 
     def ingest_day_events(self, day: int) -> None:
@@ -128,19 +157,29 @@ class ProductionSim:
         for t, uid in pairs:
                 candidate = {"item_id": int(self._rng.integers(0, cfg.stream.n_items))}
                 if self.label_fn is not None:
-                    uih = self.snapshotter.inference_uih(uid, t)
                     candidate["category"] = int(
                         self.events._item_category[candidate["item_id"]])
-                    labels = self.label_fn(uih, candidate, self._rng)
+                    # labels derive from the inference-time UIH: use the SAME
+                    # fetch for labels, example, and reference (a second fetch
+                    # could land on the other side of a generation flip)
+                    exm, ref = self.snapshotter.snapshot_with_reference(
+                        uid, t, candidate, label_ts=t + 60_000,
+                        labels_fn=lambda uih: self.label_fn(
+                            uih, candidate, self._rng))
                     if capture_reference:
-                        self.references.append(uih)
+                        self.references.append(ref)
+                elif capture_reference:
+                    labels = {"click": float(self._rng.random() < 0.1)}
+                    # example + reference from ONE two-tier fetch: the pair is
+                    # consistent even when compaction flips the generation
+                    # between requests (streaming stress tests rely on this)
+                    exm, ref = self.snapshotter.snapshot_with_reference(
+                        uid, t, candidate, labels, label_ts=t + 60_000)
+                    self.references.append(ref)
                 else:
                     labels = {"click": float(self._rng.random() < 0.1)}
-                    if capture_reference:
-                        self.references.append(
-                            self.snapshotter.inference_uih(uid, t))
-                exm = self.snapshotter.snapshot(uid, t, candidate, labels,
-                                                label_ts=t + 60_000)
+                    exm = self.snapshotter.snapshot(uid, t, candidate, labels,
+                                                    label_ts=t + 60_000)
                 self.examples.append(exm)
                 self.stream.publish(exm)
         self.warehouse.ingest(self.examples[-cfg.stream.n_users * cfg.requests_per_user_day:])
@@ -160,7 +199,9 @@ class ProductionSim:
             self.run_day(d, capture_reference=capture_reference)
 
     # -- verification hooks ------------------------------------------------------
-    def materializer(self, validate_checksum: bool = True) -> Materializer:
+    def materializer(self, validate_checksum: bool = True,
+                     pin_generations: bool = False) -> Materializer:
         return Materializer(
-            self.immutable, self.schema, validate_checksum=validate_checksum
+            self.immutable, self.schema, validate_checksum=validate_checksum,
+            pin_generations=pin_generations,
         )

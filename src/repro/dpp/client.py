@@ -101,6 +101,9 @@ class RebatchingClient:
         self._free: List[Dict[str, np.ndarray]] = []   # recycled slot storage
         self._max_free = buffer_batches
         self.stats = ClientStats()
+        # end-of-stream sentinel observed by the consumer: lets a wall-clock-
+        # bounded trainer distinguish "stream over" from "get timed out"
+        self.ended = False
 
     # -- slot machinery ----------------------------------------------------------
     def _perm_inv(self, emit_seq: int, n: int) -> Optional[np.ndarray]:
@@ -318,6 +321,8 @@ class RebatchingClient:
         t0 = time.perf_counter()
         try:
             out = self._q.get(timeout=timeout)
+            if out is None:
+                self.ended = True
         except queue.Empty:
             out = None
         if out is not None and record:

@@ -14,7 +14,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -95,6 +95,10 @@ class DPPWorkerPool:
         self._live = 0      # threads spawned and not yet exited
         self._retire = 0    # pending cooperative-shrink tokens
         self._done = threading.Event()
+        # set once no further items will arrive: immediately by ``start``
+        # (static work list), by the feeder thread's exit for ``start_stream``
+        self._feed_done = threading.Event()
+        self._feeder: Optional[threading.Thread] = None
         self._monitor: Optional[threading.Thread] = None
         self.items_done = 0
         self.peak_workers = n_workers
@@ -109,13 +113,19 @@ class DPPWorkerPool:
                         self._retire -= 1
                         return  # cooperative shrink: retire this thread
                 try:
-                    item = self._items.get_nowait()
+                    item = self._items.get(timeout=0.05)
                 except queue.Empty:
-                    return
+                    if self._feed_done.is_set():
+                        return  # stream over AND queue drained
+                    continue    # live feed: stay parked for the next item
                 if self.jagged and hasattr(worker, "process_jagged"):
-                    self.client.put_jagged(worker.process_jagged(item))
+                    out = worker.process_jagged(item)
+                    if out is not None:   # None = worker dropped every example
+                        self.client.put_jagged(out)
                 else:
-                    self.client.put(worker.process(item))
+                    out = worker.process(item)
+                    if out is not None:
+                        self.client.put(out)
                 with self._lock:
                     self.items_done += 1
         except BaseException as e:
@@ -164,7 +174,7 @@ class DPPWorkerPool:
         last_busy = self._busy_time_total()
         last_t = time.perf_counter()
         while not self._done.wait(self.control_interval_s):
-            if self._items.empty():
+            if self._feed_done.is_set() and self._items.empty():
                 return
             s = self.client.stats
             now = time.perf_counter()
@@ -185,14 +195,66 @@ class DPPWorkerPool:
 
     # -- API ---------------------------------------------------------------------
     def start(self, items: Sequence[List]) -> "DPPWorkerPool":
+        """Dispatch a STATIC work list; workers exit once it is drained."""
         for item in items:
             self._items.put(item)
+        self._feed_done.set()
+        self._start_threads()
+        return self
+
+    def start_stream(self, items: Iterable[List],
+                     max_buffered: int = 0) -> "DPPWorkerPool":
+        """Dispatch a LIVE item source (e.g. ``StreamingSource.micro_batches``):
+        a feeder thread pulls items as they become available and workers stay
+        parked across idle gaps; they exit only when the source is exhausted
+        AND the queue is drained. A feeder failure is re-raised from
+        ``join()`` like any worker error.
+
+        ``max_buffered`` > 0 bounds the item queue, applying backpressure to
+        the source — without it a fast producer (e.g. a warehouse backfill
+        replay) would buffer its entire output in memory ahead of the
+        workers."""
+        if max_buffered > 0:
+            # workers have not started yet; swapping the queue is safe
+            self._items = queue.Queue(maxsize=max_buffered)
+
+        def feeder() -> None:
+            try:
+                for item in items:
+                    while True:
+                        # NO live workers + recorded errors = the pool died:
+                        # stop feeding (checked per attempt, not just on
+                        # queue.Full, so an unbounded queue doesn't keep
+                        # consuming the source for nobody), or join() (and
+                        # the client close that unblocks the trainer) would
+                        # wait on this feeder forever
+                        with self._lock:
+                            dead = self._live == 0 and bool(self._errors)
+                        if dead:
+                            return
+                        try:
+                            self._items.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+            except BaseException as e:
+                with self._lock:
+                    self._errors.append(e)
+            finally:
+                self._feed_done.set()
+
+        self._feeder = threading.Thread(target=feeder, daemon=True,
+                                        name="dpp-feeder")
+        self._feeder.start()
+        self._start_threads()
+        return self
+
+    def _start_threads(self) -> None:
         self._resize_to(self._n_initial)
         if self.controller is not None:
             self._monitor = threading.Thread(target=self._monitor_loop,
                                              daemon=True)
             self._monitor.start()
-        return self
 
     def _join_workers(self) -> None:
         while True:
@@ -210,6 +272,22 @@ class DPPWorkerPool:
 
     def join(self) -> None:
         try:
+            # workers first: if they ALL died on errors while the feeder is
+            # parked on a full bounded queue, the feeder's dead-pool check
+            # needs the worker exits to have landed before it can abort
+            self._join_workers()
+            if self._feeder is not None:
+                while self._feeder.is_alive():
+                    self._feeder.join(timeout=0.1)
+                    if self._feeder.is_alive():
+                        with self._lock:
+                            dead = self._live == 0 and bool(self._errors)
+                        if dead:
+                            # the feeder may be parked INSIDE the source
+                            # iterator (idle-open stream) where no dead-pool
+                            # check can run: abandon the daemon thread so the
+                            # client close + error re-raise below still happen
+                            break
             self._join_workers()
             self._done.set()
             if self._monitor is not None:

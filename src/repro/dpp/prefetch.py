@@ -102,6 +102,8 @@ class DevicePrefetcher:
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._started = False
+        # end-of-stream sentinel observed by the consumer (vs a get timeout)
+        self.ended = False
 
     # -- producer (background transfer thread) -----------------------------------
     def _pull(self):
@@ -183,6 +185,8 @@ class DevicePrefetcher:
         t0 = time.perf_counter()
         try:
             out = self._q.get(timeout=timeout)
+            if out is None:
+                self.ended = True
         except queue.Empty:
             return None
         dt = time.perf_counter() - t0
@@ -203,11 +207,16 @@ class DevicePrefetcher:
         return out
 
     def record_train_step(self, seconds: float) -> None:
-        self.stats.train_time_s += seconds
         rec = getattr(self.source, "record_train_step", None)
-        # do NOT forward: train time is a single global clock; the source and
-        # the prefetcher share one ClientStats unless the caller passed two
-        if rec is not None and getattr(self.source, "stats", None) is not self.stats:
+        if rec is not None and getattr(self.source, "stats", None) is self.stats:
+            # the source owns the shared ClientStats: DELEGATE instead of
+            # recording here — train time is a single global clock, and the
+            # source may have step-completion side effects of its own (e.g.
+            # StreamingSession settles event->gradient freshness samples)
+            rec(seconds)
+            return
+        self.stats.train_time_s += seconds
+        if rec is not None:
             rec(seconds)
 
     def _drain(self) -> None:

@@ -506,6 +506,18 @@ def make_device_feed(cell: Cell, source, mesh=None, depth: int = 2,
                             recycle_host=recycle_host)
 
 
+def make_streaming_feed(cell: Cell, session, mesh=None, depth: int = 2,
+                        prep_fn=None, recycle_host: bool = False):
+    """Streaming feed mode: wrap a ``repro.streaming.StreamingSession`` in the
+    cell-sharded device prefetcher. The session speaks the rebatching client's
+    feed protocol, so the prefetcher overlaps H2D with the step exactly as in
+    batch mode, while the session settles event→gradient freshness samples at
+    every full-batch delivery and releases generation leases as micro-batches
+    drain. ``session.start()`` is implicit on first pull."""
+    return make_device_feed(cell, session, mesh=mesh, depth=depth,
+                            prep_fn=prep_fn, recycle_host=recycle_host)
+
+
 def build_cell(spec: ArchSpec, shape_name: str, mesh, use_full=True,
                cfg_override=None) -> Cell:
     if spec.family == "lm":

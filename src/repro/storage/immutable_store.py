@@ -27,6 +27,20 @@ whole batch, and decoding each stripe blob at most once per batch via the
 savings: ``dedup_hits`` (requests answered by an identical in-batch twin),
 ``decode_cache_hits`` (stripe decodes skipped), and ``parallel_shards``
 (cumulative shard fanout executed concurrently by batched scans).
+
+**Generation leases** (bifurcated O2O protocol, §3.2): streaming training has
+examples in flight that reference the generation observed at T_request; daily
+compaction must not yank that generation out from under them. A publisher
+acquires a refcounted ``GenerationLease`` per in-flight example; ``bulk_load``
+then *retains* a superseded generation while leases on it remain, and a
+``ScanRequest`` carrying ``generation >= 0`` is served from the retained
+table — the exact event set the ranking model saw, even if the new generation
+scrubbed or re-cut history. Once the last lease is released (the example has
+been materialized/trained) the retained generation is garbage-collected.
+Scanning a generation that is neither live nor retained raises
+``GenerationUnavailable``; the ``Materializer`` remediates by re-resolving
+against the live generation with the version's ``end_ts`` clamp plus checksum
+revalidation.
 """
 from __future__ import annotations
 
@@ -60,6 +74,53 @@ class ScanRequest:
     end_ts: int              # inclusive temporal upper bound (version metadata)
     max_events: int = -1     # sequence-length projection (-1 = unbounded)
     traits: Optional[Tuple[str, ...]] = None  # trait projection (None = group's all)
+    generation: int = -1     # -1 = live; >= 0 = pinned (leased) generation
+
+
+class GenerationUnavailable(KeyError):
+    """The requested generation is neither live nor retained by a lease."""
+
+
+class GenerationLease:
+    """Refcounted pin on one immutable generation (context-manager friendly).
+
+    ``release()`` is idempotent; dropping the last lease on a superseded
+    generation garbage-collects its tables."""
+
+    __slots__ = ("generation", "_store", "_released")
+
+    def __init__(self, store: "ImmutableUIHStore", generation: int):
+        self.generation = generation
+        self._store = store
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._store._release_lease(self.generation)
+
+    def __enter__(self) -> "GenerationLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+@dataclasses.dataclass
+class LeaseStats:
+    acquired: int = 0
+    released: int = 0
+    generations_retained: int = 0   # superseded generations kept for leases
+    generations_gc: int = 0         # retained generations dropped at last release
+
+
+@dataclasses.dataclass
+class _GenTable:
+    """One bulk-loaded generation: shard tables + lease refcount."""
+
+    gen: int
+    shards: List[Dict[Tuple[int, str], Tuple[List[int], List["Stripe"]]]]
+    refs: int = 0
 
 
 @dataclasses.dataclass
@@ -73,6 +134,7 @@ class IOStats:
     dedup_hits: int = 0         # requests answered by an identical in-plan twin
     decode_cache_hits: int = 0  # stripe decodes served from the decode LRU
     parallel_shards: int = 0    # cumulative shard fanout of batched executions
+    pinned_scans: int = 0       # scans served from a retained (leased) generation
 
     def snapshot(self) -> "IOStats":
         return dataclasses.replace(self)
@@ -112,10 +174,13 @@ class ImmutableUIHStore:
     ):
         self.schema = schema or ev.default_schema()
         self.router = ShardRouter(n_shards)
-        # shard -> (user_id, group) -> (sorted start_ts list, stripes list)
-        self._shards: List[Dict[Tuple[int, str], Tuple[List[int], List[Stripe]]]] = [
-            {} for _ in range(n_shards)
-        ]
+        self.n_shards = n_shards
+        # live generation: shard -> (user_id, group) -> (start_ts list, stripes)
+        self._live = _GenTable(gen=-1, shards=[{} for _ in range(n_shards)])
+        # superseded generations pinned by outstanding leases (gen -> table)
+        self._retained: Dict[int, _GenTable] = {}
+        self._gen_lock = threading.Lock()
+        self.lease_stats = LeaseStats()
         self.generation = -1
         self.stats = IOStats()
         self.bulk_load_bytes = 0
@@ -134,19 +199,29 @@ class ImmutableUIHStore:
             max_workers=min(n_shards, 16), thread_name_prefix="uih-scan"
         )
 
+    # -- compat: the live generation's shard tables --------------------------
+    @property
+    def _shards(self) -> List[Dict[Tuple[int, str], Tuple[List[int], List[Stripe]]]]:
+        return self._live.shards
+
     # -- bulk load (write path) ---------------------------------------------
     def bulk_load(
         self,
         tables: Dict[Tuple[int, str], List[Stripe]],
         generation: int,
     ) -> None:
-        """Replace the store contents with a new compaction generation.
+        """Install a new compaction generation as the live read target.
 
         ``tables`` maps (user_id, group) -> chronologically ordered stripes.
         Pre-sorted input is *required* (compaction guarantees it); the store
-        only verifies and installs — mirroring a bulk file ingest."""
+        only verifies and installs — mirroring a bulk file ingest.
+
+        The superseded generation is dropped immediately UNLESS leases pin it
+        (in-flight streaming examples still reference it) — then it is
+        retained until the last lease is released. In-flight scans are safe
+        either way: they resolve their shard tables once, up front."""
         new_shards: List[Dict[Tuple[int, str], Tuple[List[int], List[Stripe]]]] = [
-            {} for _ in self._shards
+            {} for _ in range(self.n_shards)
         ]
         load_bytes = 0
         for (user_id, group), stripes in tables.items():
@@ -155,14 +230,94 @@ class ImmutableUIHStore:
             shard = self.router.route(user_id)
             new_shards[shard][(user_id, group)] = (starts, list(stripes))
             load_bytes += sum(len(s.blob) for s in stripes)
-        self._shards = new_shards
-        self.generation = generation
+        with self._gen_lock:
+            old = self._live
+            if generation in self._retained or (
+                    old.gen == generation and old.gen >= 0 and old.refs > 0):
+                # a leased generation's bytes must never change: silently
+                # replacing its tables would swap content under leaseholders
+                # (and strand their refcounts on the new table)
+                refs = (self._retained[generation].refs
+                        if generation in self._retained else old.refs)
+                raise ValueError(
+                    f"generation id {generation} is still leased "
+                    f"(refs={refs}); ids must not be reused while leased")
+            if old.refs > 0 and old.gen >= 0 and old.gen != generation:
+                self._retained[old.gen] = old
+                self.lease_stats.generations_retained += 1
+            self._live = _GenTable(gen=generation, shards=new_shards)
+            self.generation = generation
         self.bulk_load_bytes += load_bytes
 
+    # -- generation leases ----------------------------------------------------
+    def acquire_lease(self, generation: Optional[int] = None) -> GenerationLease:
+        """Pin ``generation`` (default: live) against GC by future bulk loads.
+
+        Raises ``GenerationUnavailable`` if the generation has already been
+        superseded AND garbage-collected."""
+        with self._gen_lock:
+            live = self._live
+            if generation is None or generation < 0 or generation == live.gen:
+                live.refs += 1
+                target = live.gen
+            else:
+                g = self._retained.get(generation)
+                if g is None:
+                    raise GenerationUnavailable(
+                        f"generation {generation} is gone (live={live.gen}, "
+                        f"retained={sorted(self._retained)})")
+                g.refs += 1
+                target = generation
+            self.lease_stats.acquired += 1
+        return GenerationLease(self, target)
+
+    def _release_lease(self, generation: int) -> None:
+        with self._gen_lock:
+            self.lease_stats.released += 1
+            if generation == self._live.gen:
+                self._live.refs = max(0, self._live.refs - 1)
+                return
+            g = self._retained.get(generation)
+            if g is None:
+                return
+            g.refs -= 1
+            if g.refs <= 0:
+                del self._retained[generation]
+                self.lease_stats.generations_gc += 1
+
+    def has_generation(self, generation: int) -> bool:
+        """True iff a ``ScanRequest(generation=...)`` would be servable now."""
+        return generation == self._live.gen or generation in self._retained
+
+    def leased_generations(self) -> Dict[int, int]:
+        """generation -> outstanding lease refcount (live included if leased)."""
+        with self._gen_lock:
+            out = {g.gen: g.refs for g in self._retained.values()}
+            if self._live.refs > 0:
+                out[self._live.gen] = self._live.refs
+            return out
+
+    def retained_generations(self) -> List[int]:
+        with self._gen_lock:
+            return sorted(self._retained)
+
     # -- read path ------------------------------------------------------------
-    def _locate(self, user_id: int, group: str):
+    def _table_for(self, generation: int):
+        """Shard tables serving ``generation`` (-1 = live). Lock-free: a single
+        attribute/dict read suffices, and holding the returned reference keeps
+        the tables alive even if the generation is GC'd mid-scan."""
+        live = self._live
+        if generation < 0 or generation == live.gen:
+            return live.shards
+        g = self._retained.get(generation)
+        if g is not None:
+            return g.shards
+        raise GenerationUnavailable(
+            f"generation {generation} is gone (live={live.gen})")
+
+    def _locate(self, user_id: int, group: str, generation: int = -1):
         shard = self.router.route(user_id)
-        return shard, self._shards[shard].get((user_id, group))
+        return shard, self._table_for(generation)[shard].get((user_id, group))
 
     def _decode(self, s: Stripe, traits, stats: IOStats) -> ev.EventBatch:
         if self.decode_cache is None:
@@ -180,7 +335,9 @@ class ImmutableUIHStore:
         executor passes per-shard accumulators so shard threads don't race)."""
         stats.requests += 1
         traits = req.traits or self.schema.group_traits(req.group)
-        shard, entry = self._locate(req.user_id, req.group)
+        if req.generation >= 0 and req.generation != self.generation:
+            stats.pinned_scans += 1
+        shard, entry = self._locate(req.user_id, req.group, req.generation)
         if entry is None:
             return ev.empty_batch(self.schema, traits)
         starts, stripes = entry
@@ -321,15 +478,29 @@ class ImmutableUIHStore:
             for s in stripes
         )
 
+    def retained_bytes(self) -> int:
+        """Extra bytes held alive by generation leases (retention cost)."""
+        with self._gen_lock:
+            gens = list(self._retained.values())
+        return sum(
+            len(s.blob)
+            for g in gens
+            for shard in g.shards
+            for _, stripes in shard.values()
+            for s in stripes
+        )
+
     def stored_events(self, user_id: int, group: str) -> int:
         _, entry = self._locate(user_id, group)
         if entry is None:
             return 0
         return sum(s.n_events for s in entry[1])
 
-    def watermark(self, user_id: int, group: str = "core") -> int:
-        """Largest timestamp consolidated into the immutable tier for a user."""
-        _, entry = self._locate(user_id, group)
+    def watermark(self, user_id: int, group: str = "core",
+                  generation: int = -1) -> int:
+        """Largest timestamp consolidated into the immutable tier for a user
+        (as of ``generation``; -1 = live)."""
+        _, entry = self._locate(user_id, group, generation)
         if entry is None or not entry[1]:
             return -1
         return entry[1][-1].end_ts

@@ -11,6 +11,7 @@ stay in the mutable tier until the next compaction cycle has consolidated them
 into the immutable tier (``evict_until``)."""
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -24,18 +25,25 @@ class MutableUIHStore:
         self._chunks: Dict[int, List[ev.EventBatch]] = {}
         # write-through cache of the merged view, invalidated on append
         self._cache: Dict[int, ev.EventBatch] = {}
+        # append/evict mutual exclusion: eviction's merge->install sequence
+        # must not lose a concurrent blind-write (or re-publish a cached view
+        # missing it); reads stay lock-free
+        self._write_lock = threading.Lock()
         # accounting for benchmarks
         self.bytes_written = 0
         self.bytes_read = 0
         self.appends = 0
+        self.evict_cache_hits = 0   # evictions served from the merged-view cache
+        self.evict_merges = 0       # evictions that had to re-merge chunks
 
     # -- write path ---------------------------------------------------------
     def append(self, user_id: int, batch: ev.EventBatch) -> None:
         """Blind-write append: no read, no sort, O(1) amortized."""
         if ev.batch_len(batch) == 0:
             return
-        self._chunks.setdefault(user_id, []).append(batch)
-        self._cache.pop(user_id, None)
+        with self._write_lock:
+            self._chunks.setdefault(user_id, []).append(batch)
+            self._cache.pop(user_id, None)
         self.appends += 1
         self.bytes_written += sum(v.nbytes for v in batch.values())
 
@@ -47,10 +55,18 @@ class MutableUIHStore:
         is cached (write-through cache) until the next append."""
         merged = self._cache.get(user_id)
         if merged is None:
-            merged = ev.merge_sorted(self._chunks.get(user_id, []))
+            chunks = self._chunks.get(user_id, [])
+            n0 = len(chunks)
+            merged = ev.merge_sorted(chunks)
             if not merged:
                 merged = ev.empty_batch(self.schema)
-            self._cache[user_id] = merged
+            with self._write_lock:
+                # install only if no append/evict raced the merge: eviction
+                # trusts the cache as authoritative, so a stale install here
+                # would let it write back a view missing the new chunk
+                if (self._chunks.get(user_id) is chunks
+                        and len(chunks) == n0):
+                    self._cache[user_id] = merged
         out = ev.time_slice(merged, t_lo + 1, t_hi)
         self.bytes_read += sum(v.nbytes for v in out.values())
         return out
@@ -58,19 +74,31 @@ class MutableUIHStore:
     # -- retention ----------------------------------------------------------
     def evict_until(self, user_id: int, watermark_ts: int) -> None:
         """Drop events with timestamp <= watermark (already compacted into the
-        immutable tier). Called after each compaction cycle."""
-        chunks = self._chunks.get(user_id)
-        if not chunks:
-            return
-        merged = ev.merge_sorted(chunks)
-        ts = merged["timestamp"]
-        keep_from = int(np.searchsorted(ts, watermark_ts, side="right"))
-        kept = ev.slice_batch(merged, keep_from, len(ts))
-        if ev.batch_len(kept) == 0:
-            self._chunks.pop(user_id, None)
-        else:
-            self._chunks[user_id] = [kept]
-        self._cache.pop(user_id, None)
+        immutable tier). Called after each compaction cycle.
+
+        Reuses the write-through cache's merged view when valid (it is
+        invalidated on every append, so a present entry IS the chunks' merge)
+        instead of re-merging every chunk list on each cycle; the surviving
+        suffix is written back so the next read is also merge-free."""
+        with self._write_lock:
+            chunks = self._chunks.get(user_id)
+            if not chunks:
+                return
+            merged = self._cache.get(user_id)
+            if merged is None or ev.batch_len(merged) == 0:
+                merged = ev.merge_sorted(chunks)
+                self.evict_merges += 1
+            else:
+                self.evict_cache_hits += 1
+            ts = merged["timestamp"]
+            keep_from = int(np.searchsorted(ts, watermark_ts, side="right"))
+            kept = ev.slice_batch(merged, keep_from, len(ts))
+            if ev.batch_len(kept) == 0:
+                self._chunks.pop(user_id, None)
+                self._cache.pop(user_id, None)
+            else:
+                self._chunks[user_id] = [kept]
+                self._cache[user_id] = kept
 
     def evict_all_until(self, watermark_ts: int) -> None:
         for uid in list(self._chunks.keys()):

@@ -12,6 +12,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Deque, Dict, Iterator, List, Optional, Sequence
 
 from repro.core import events as ev
@@ -26,9 +27,20 @@ class TrainingExampleStream:
 
     Thread-safe: the ingestion service publishes, streaming DPP workers consume.
     Byte accounting measures the stream write bandwidth (Table 1 'primary
-    write')."""
+    write').
 
-    def __init__(self, schema: ev.TraitSchema, capacity: int = 1 << 16):
+    **Generation pinning** (bifurcated protocol, §3.2): when constructed with a
+    ``lease_manager`` (the ``ImmutableUIHStore``), every published VLM example
+    acquires a refcounted lease on the generation its version metadata
+    references, so daily compaction cannot GC that generation while the
+    example is in flight. The consumer releases the lease via ``ack()`` once
+    the example has been materialized (drained). An acquire that races a
+    compaction losing the generation is counted in ``lease_misses`` — the
+    materializer's stale-generation remediation covers that example instead.
+    """
+
+    def __init__(self, schema: ev.TraitSchema, capacity: int = 1 << 16,
+                 lease_manager=None):
         self.schema = schema
         self._q: Deque[TrainingExample] = collections.deque()
         self._cv = threading.Condition()
@@ -36,20 +48,48 @@ class TrainingExampleStream:
         self.bytes_published = 0
         self.examples_published = 0
         self._closed = False
+        # generation pinning + publish-time wall clocks (freshness metrics)
+        self.lease_manager = lease_manager
+        self._leases: Dict[int, object] = {}      # request_id -> GenerationLease
+        self._pub_wall: Dict[int, float] = {}     # request_id -> publish wall time
+        # flipped on by an attaching StreamingSource: publish-time clocks are
+        # only recorded (and popped) when a streaming consumer exists — a
+        # batch-only publisher must not accrete them
+        self.track_freshness = False
+        self.leases_acquired = 0
+        self.lease_misses = 0
+        self.acked = 0
 
     def publish(self, example: TrainingExample) -> None:
         blob_len = example.payload_bytes(self.schema)
+        lease = None
+        if (self.lease_manager is not None and example.version is not None
+                and example.version.generation >= 0):
+            try:
+                lease = self.lease_manager.acquire_lease(
+                    example.version.generation)
+            except KeyError:       # gen GC'd between snapshot and publish:
+                self.lease_misses += 1  # remediation re-resolves downstream
         with self._cv:
             while len(self._q) >= self.capacity and not self._closed:
                 self._cv.wait()
             if self._closed:
+                if lease is not None:
+                    lease.release()
                 raise RuntimeError("stream closed")
             self._q.append(example)
+            if lease is not None:
+                self._leases[example.request_id] = lease
+                self.leases_acquired += 1
+            if self.track_freshness:
+                self._pub_wall[example.request_id] = time.perf_counter()
             self.bytes_published += blob_len
             self.examples_published += 1
             self._cv.notify_all()
 
     def consume(self, timeout: Optional[float] = None) -> Optional[TrainingExample]:
+        """Next example, or ``None`` — which means EITHER the wait timed out OR
+        the stream is closed and fully drained; disambiguate via ``drained``."""
         with self._cv:
             while not self._q and not self._closed:
                 if not self._cv.wait(timeout=timeout):
@@ -59,6 +99,51 @@ class TrainingExampleStream:
             out = self._q.popleft()
             self._cv.notify_all()
             return out
+
+    @property
+    def drained(self) -> bool:
+        """True iff the stream is closed AND every example has been consumed —
+        the unambiguous end-of-stream signal (``consume`` returning ``None``
+        alone cannot distinguish a timeout from exhaustion)."""
+        with self._cv:
+            return self._closed and not self._q
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def lag(self) -> int:
+        """Examples published but not yet consumed (stream backlog)."""
+        with self._cv:
+            return len(self._q)
+
+    def publish_wall(self, request_id: int) -> Optional[float]:
+        """Pop the wall-clock publish time of a consumed example (freshness)."""
+        return self._pub_wall.pop(request_id, None)
+
+    def ack(self, example) -> None:
+        """Release the generation lease of a drained example (id or example)."""
+        rid = getattr(example, "request_id", example)
+        lease = self._leases.pop(rid, None)
+        if lease is not None:
+            lease.release()
+            self.acked += 1
+
+    def pending_leases(self) -> int:
+        return len(self._leases)
+
+    def release_leases(self) -> int:
+        """Drop every outstanding lease (shutdown path). Returns the count."""
+        n = 0
+        while self._leases:
+            try:
+                _, lease = self._leases.popitem()
+            except KeyError:
+                break
+            lease.release()
+            n += 1
+        return n
 
     def close(self) -> None:
         with self._cv:
@@ -124,7 +209,11 @@ class Warehouse:
         return sorted(self._partitions)
 
     def read_partition(self, hour: int) -> List[TrainingExample]:
-        part = self._partitions[hour]
+        """All examples of one hour; an hour with no data reads as empty (a
+        backfill sweep over a contiguous hour range must not trip on gaps)."""
+        part = self._partitions.get(hour)
+        if part is None:
+            return []
         out: List[TrainingExample] = []
         for bucket in sorted(part.buckets):
             for blob in part.buckets[bucket]:
@@ -134,8 +223,10 @@ class Warehouse:
 
     def iter_bucketed(self, hour: int) -> Iterator[List[TrainingExample]]:
         """Yield one user-clustered bucket at a time (the batch-training unit of
-        work handed to a DPP worker)."""
-        part = self._partitions[hour]
+        work handed to a DPP worker); an empty hour yields nothing."""
+        part = self._partitions.get(hour)
+        if part is None:
+            return
         for bucket in sorted(part.buckets):
             blobs = part.buckets[bucket]
             self.bytes_read += sum(len(b) for b in blobs)

@@ -1,0 +1,101 @@
+"""Batch→stream catch-up handoff (paper §3.2).
+
+A trainer that starts (or restarts) behind the live edge first **replays
+warehouse hours** — the batch tier, user-bucketed, cheap sequential reads —
+then **flips to live stream consumption**, with an exactly-once guarantee at
+the flip:
+
+  * ``request_id``s are allocated monotonically in request-arrival order, and
+    warehouse hours partition that order, so the largest replayed id is a
+    **watermark**: every id <= watermark has been trained from the warehouse;
+  * the live phase drops stream examples with ``request_id <= watermark``
+    (they are the same examples, republished on the other leg of the
+    bifurcated pipeline) and releases their generation leases;
+  * everything above the watermark is trained exactly once, from the stream.
+
+The replayed hour range is captured at **construction time** and must be
+sealed (no concurrent ingestion into those hours): construct the coordinator
+while the warehouse head is a finished hour, then start live traffic. Hours
+inside the range with no data read as empty — the sweep is contiguous and
+gap-tolerant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+from repro.core.versioning import TrainingExample
+from repro.storage.stream import Warehouse
+from repro.streaming.source import StreamingSource
+
+
+@dataclasses.dataclass
+class BackfillStats:
+    hours_replayed: int = 0
+    empty_hours: int = 0
+    warehouse_examples: int = 0
+    stream_examples: int = 0
+    duplicates_skipped: int = 0   # stream copies of warehouse-trained examples
+    watermark: int = -1           # largest request_id trained from the warehouse
+    flipped: bool = False         # reached the live phase
+
+
+class BackfillCoordinator:
+    """Replay ``warehouse`` hours up to the (sealed) head, then flip to live
+    consumption from ``source`` — one unified micro-batch iterator a
+    ``DPPWorkerPool`` can drain via ``start_stream``."""
+
+    def __init__(
+        self,
+        warehouse: Warehouse,
+        source: StreamingSource,
+        micro_batch: int = 32,
+        start_hour: Optional[int] = None,
+        end_hour: Optional[int] = None,
+    ):
+        self.warehouse = warehouse
+        self.source = source
+        self.micro_batch = micro_batch
+        hours = warehouse.hours()
+        # the replay range is FROZEN here: [start_hour, end_hour] must be
+        # sealed before live traffic starts, or the watermark under-covers
+        self.start_hour = start_hour if start_hour is not None else (
+            hours[0] if hours else 0)
+        self.end_hour = end_hour if end_hour is not None else (
+            hours[-1] if hours else self.start_hour - 1)
+        self.stats = BackfillStats()
+
+    def micro_batches(self) -> Iterator[List[TrainingExample]]:
+        st = self.stats
+        # -- phase 1: warehouse replay (contiguous, gap-tolerant hour sweep) --
+        buf: List[TrainingExample] = []
+        for hour in range(self.start_hour, self.end_hour + 1):
+            empty = True
+            for bucket in self.warehouse.iter_bucketed(hour):
+                for exm in bucket:
+                    empty = False
+                    if exm.request_id > st.watermark:
+                        st.watermark = exm.request_id
+                    st.warehouse_examples += 1
+                    buf.append(exm)
+                    if len(buf) >= self.micro_batch:
+                        yield buf
+                        buf = []
+            st.hours_replayed += 1
+            if empty:
+                st.empty_hours += 1
+        if buf:
+            yield buf
+        st.flipped = True
+        # -- phase 2: live stream, exactly-once across the flip ---------------
+        for mb in self.source.micro_batches():
+            keep: List[TrainingExample] = []
+            for exm in mb:
+                if exm.request_id <= st.watermark:
+                    st.duplicates_skipped += 1
+                    self.source.discard(exm)   # release its lease; it already
+                    continue                   # trained from the warehouse
+                st.stream_examples += 1
+                keep.append(exm)
+            if keep:
+                yield keep

@@ -1,0 +1,301 @@
+"""Streaming training session (paper §3.2): event → gradient, one object.
+
+``StreamingSession`` closes the loop the batch pipeline leaves open: a
+``StreamingSource`` (optionally fronted by a ``BackfillCoordinator`` for the
+batch→stream catch-up handoff) feeds micro-batches into the existing
+``DPPWorkerPool`` → ``RebatchingClient`` data plane, and the session itself
+speaks the client's feed protocol (``get_full_batch`` / ``recycle`` /
+``record_train_step`` / ``stats``) so a ``Trainer`` or ``DevicePrefetcher``
+consumes it exactly like a batch feed.
+
+Protocol duties handled here:
+
+  * **lease release**: after a worker materializes+featurizes a micro-batch,
+    its examples' generation leases are released (``TrainingExampleStream.ack``)
+    — the store may then GC superseded generations ("GC once drained");
+  * **freshness**: each example's publish wall clock rides from the stream
+    through the source into a FIFO settlement queue; each
+    ``record_train_step`` call (the trainer's step-completion signal, which a
+    ``DevicePrefetcher`` delegates through) settles the OLDEST delivered
+    batch's rows into event→gradient latency samples — correct even when the
+    prefetcher pulls ``depth`` batches ahead of the gradient (FIFO
+    row-matching is exact at full-batch granularity, approximate at row
+    granularity under the reshuffle — documented, and irrelevant to the
+    mean). A consumer that never records steps still gets all samples
+    settled, late, at ``join()``.
+
+Shutdown: close the stream; the source drains, the feeder finishes, workers
+exit, the pool closes the client, the trainer sees end-of-stream. ``join()``
+then surfaces any worker/feeder error.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.materialize import ChecksumMismatch
+from repro.dpp.client import RebatchingClient
+from repro.dpp.elastic import DPPWorkerPool, ElasticController
+from repro.storage.stream import TrainingExampleStream, Warehouse
+from repro.streaming.backfill import BackfillCoordinator
+from repro.streaming.source import MicroBatchConfig, StreamingSource
+
+
+@dataclasses.dataclass
+class FreshnessStats:
+    batches_delivered: int = 0
+    rows_settled: int = 0
+    samples: int = 0
+    event_to_gradient_s_sum: float = 0.0
+    event_to_gradient_s_max: float = 0.0
+
+    @property
+    def mean_event_to_gradient_s(self) -> float:
+        if not self.samples:
+            return 0.0
+        return self.event_to_gradient_s_sum / self.samples
+
+
+class _AckingWorker:
+    """Wraps a ``DPPWorker``: after a micro-batch is materialized+featurized,
+    release its generation leases and queue its publish clocks for freshness
+    settlement. Duck-compatible with ``DPPWorkerPool`` (stats/process*).
+
+    A ``ChecksumMismatch``/``StaleGeneration`` from the materializer is the
+    protocol's *drop this example* signal (its window genuinely changed, e.g.
+    right-to-delete): the worker triages the micro-batch per example, drops
+    the offenders (counted in ``session.stale_dropped``, leases released),
+    and featurizes the survivors — it must NOT die and take the session down.
+    """
+
+    def __init__(self, inner, session: "StreamingSession"):
+        self._inner = inner
+        self._session = session
+
+    @property
+    def stats(self):
+        return self._inner.stats
+
+    @property
+    def materializer(self):
+        return self._inner.materializer
+
+    def process(self, examples):
+        return self._process(examples, self._inner.process)
+
+    def process_jagged(self, examples):
+        return self._process(examples, self._inner.process_jagged)
+
+    def _process(self, examples, fn):
+        kept = list(examples)
+        dropped_all: List = []
+        while True:
+            try:
+                out = fn(kept) if kept else None
+                break
+            except ChecksumMismatch:
+                kept, dropped = self._triage(kept)
+                dropped_all.extend(dropped)
+                if not dropped:
+                    # fn raised but per-example triage passed everything: a
+                    # flip landed between triage and the batch re-run. Drop
+                    # the remainder rather than loop (or die) — rare double
+                    # race, and dropping is always protocol-safe.
+                    dropped_all.extend(kept)
+                    kept = []
+        self._session._on_item_done(kept, dropped=dropped_all)
+        return out
+
+    def _triage(self, examples):
+        keep, dropped = [], []
+        mat, projection = self._inner.materializer, self._inner.projection
+        for exm in examples:
+            try:
+                mat.materialize(exm, projection)
+                keep.append(exm)
+            except ChecksumMismatch:
+                dropped.append(exm)
+        return keep, dropped
+
+
+class StreamingSession:
+    def __init__(
+        self,
+        stream: TrainingExampleStream,
+        make_worker: Callable[[], object],
+        *,
+        full_batch_size: int,
+        micro_batch: Optional[MicroBatchConfig] = None,
+        n_workers: int = 2,
+        controller: Optional[ElasticController] = None,
+        shuffle_seed: Optional[int] = 0,
+        buffer_batches: int = 4,
+        backfill_from: Optional[Warehouse] = None,
+        jagged: bool = True,
+    ):
+        self.source = StreamingSource(stream, micro_batch)
+        mb = self.source.cfg.max_examples
+        self.coordinator = (
+            BackfillCoordinator(backfill_from, self.source, micro_batch=mb)
+            if backfill_from is not None else None
+        )
+        self.client = RebatchingClient(full_batch_size,
+                                       buffer_batches=buffer_batches,
+                                       shuffle_seed=shuffle_seed)
+        self.freshness = FreshnessStats()
+        self._pub_q: Deque[float] = collections.deque()
+        self._pq_lock = threading.Lock()
+        self._delivered: Deque[int] = collections.deque()  # rows per pulled batch
+        self._n_workers = n_workers
+        self.pool = DPPWorkerPool(
+            lambda: _AckingWorker(make_worker(), self),
+            self.client, n_workers=n_workers, controller=controller,
+            jagged=jagged,
+        )
+        self._started = False
+        self._joiner: Optional[threading.Thread] = None
+        self._join_error: List[BaseException] = []
+        # examples dropped by stale-generation triage (window truly changed)
+        self.stale_dropped = 0
+
+    # -- lifecycle --------------------------------------------------------------
+    def start(self) -> "StreamingSession":
+        """Start draining. A background joiner waits out the pool so the
+        client receives its end-of-stream sentinel the moment the stream
+        drains — the consumer must never be the one who has to call
+        ``pool.join()`` (it would deadlock waiting for batches meanwhile)."""
+        if not self._started:
+            self._started = True
+            feed = self.coordinator or self.source
+            # bound the in-flight micro-batches: backpressure keeps a fast
+            # backfill replay from materializing the whole warehouse at once
+            self.pool.start_stream(feed.micro_batches(),
+                                   max_buffered=4 * self._n_workers + 8)
+
+            def joiner() -> None:
+                try:
+                    self.pool.join()   # closes the client even on failure
+                except BaseException as e:
+                    self._join_error.append(e)
+
+            self._joiner = threading.Thread(target=joiner, daemon=True,
+                                            name="streaming-joiner")
+            self._joiner.start()
+        return self
+
+    def join(self) -> None:
+        """Wait for the drain (stream closed + queue empty) and re-raise any
+        worker/feeder failure. Call only after consuming the whole stream —
+        a consumer that walked away early must use ``stop()`` instead (the
+        workers are blocked on the bounded client queue and need a drainer)."""
+        self._settle_all()
+        if self._joiner is not None:
+            self._joiner.join()
+        if self._join_error:
+            raise self._join_error[0]
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Abandon training mid-stream: keep draining (and recycling) full
+        batches WITHOUT training until the pipeline shuts down, then join.
+        This unblocks workers parked on the bounded client queue after the
+        trainer exits early (``max_wall_s`` / ``max_steps``). Termination
+        still requires the producer to close the stream; ``timeout`` bounds
+        the wait (on expiry the daemon threads are simply abandoned)."""
+        if not self._started or self._joiner is None:
+            return
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        while self._joiner.is_alive():
+            if deadline is not None and time.perf_counter() > deadline:
+                return
+            b = self.client.get_full_batch(timeout=0.05, record=False)
+            if b is not None:
+                self.client.recycle(b)
+        self.join()
+
+    # -- worker-side callbacks ---------------------------------------------------
+    def _on_item_done(self, examples, dropped=()) -> None:
+        walls: List[float] = []
+        for exm in examples:
+            w = self.source.pop_pub_wall(exm.request_id)
+            if w is not None:
+                walls.append(w)
+        if walls:
+            with self._pq_lock:
+                self._pub_q.extend(walls)
+        self.source.ack(examples)
+        if dropped:
+            # stale-drop path: release leases + clocks, but contribute no
+            # freshness samples (these rows never reach a gradient)
+            self.stale_dropped += len(dropped)
+            self.source.ack(dropped)
+
+    # -- feed protocol (Trainer / DevicePrefetcher face) --------------------------
+    @property
+    def stats(self):
+        return self.client.stats
+
+    @property
+    def ended(self) -> bool:
+        return self.client.ended
+
+    def get_full_batch(self, timeout: Optional[float] = None,
+                       record: bool = True):
+        self.start()
+        out = self.client.get_full_batch(timeout=timeout, record=record)
+        if out is not None:
+            self.freshness.batches_delivered += 1
+            with self._pq_lock:
+                self._delivered.append(len(next(iter(out.values()))))
+        return out
+
+    def _settle_one(self) -> None:
+        """Convert the oldest delivered batch's publish clocks into
+        event→gradient samples (FIFO at full-batch granularity)."""
+        now = time.perf_counter()
+        fr = self.freshness
+        with self._pq_lock:
+            if not self._delivered:
+                return
+            rows = self._delivered.popleft()
+            take = min(rows, len(self._pub_q))
+            for _ in range(take):
+                dt = now - self._pub_q.popleft()
+                fr.event_to_gradient_s_sum += dt
+                if dt > fr.event_to_gradient_s_max:
+                    fr.event_to_gradient_s_max = dt
+                fr.samples += 1
+            fr.rows_settled += rows
+
+    def _settle_all(self) -> None:
+        while self._delivered:
+            self._settle_one()
+
+    def recycle(self, batch: Dict[str, np.ndarray]) -> None:
+        self.client.recycle(batch)
+
+    def record_train_step(self, seconds: float) -> None:
+        # the trainer (directly, or via DevicePrefetcher delegation) just
+        # finished a step: the oldest delivered batch's gradient is applied
+        self._settle_one()
+        self.client.record_train_step(seconds)
+
+    def __iter__(self):
+        while True:
+            b = self.get_full_batch()
+            if b is None:
+                return
+            yield b
+
+    # -- introspection -----------------------------------------------------------
+    def merged_worker_stats(self):
+        return self.pool.merged_worker_stats()
+
+    @property
+    def backfill_stats(self):
+        return self.coordinator.stats if self.coordinator is not None else None

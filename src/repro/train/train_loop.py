@@ -37,6 +37,9 @@ class TrainerConfig:
     # N+1 while step N computes (0 disables; 2 = classic double buffering).
     # Ignored when ``fit`` is handed an already-wrapped DevicePrefetcher.
     prefetch_depth: int = 0
+    # streaming feed mode: bound ``fit`` by wall clock instead of (or in
+    # addition to) max_steps — an online trainer's stream never exhausts.
+    max_wall_s: Optional[float] = None
 
 
 class Trainer:
@@ -130,8 +133,46 @@ class Trainer:
         # GPU-busy accounting feeds the elastic controller's starvation signal
         record = getattr(feed, "record_train_step", None)
         t0 = time.perf_counter()
+
+        def batches():
+            """Feed iterator honoring ``max_wall_s`` even while BLOCKED on an
+            idle-but-open stream: with a timeout-capable getter, poll with a
+            bounded wait so the wall budget can fire between batches; the
+            feed's ``ended`` flag distinguishes end-of-stream from a timeout."""
+            wall = self.cfg.max_wall_s
+            get = getattr(feed, "get", None) or getattr(feed, "get_full_batch",
+                                                        None)
+            if wall is None or get is None:
+                yield from feed
+                return
+            stats = getattr(feed, "stats", None)
+            pending_wait = 0.0   # timed-out poll waits, unrecorded by the feed
+            while True:
+                remaining = wall - (time.perf_counter() - t0)
+                if remaining <= 0:
+                    return
+                t_poll = time.perf_counter()
+                b = get(timeout=min(0.25, max(remaining, 0.01)))
+                if b is None:
+                    if getattr(feed, "ended", False):
+                        return
+                    pending_wait += time.perf_counter() - t_poll
+                    continue   # timed out; re-check the wall budget
+                if pending_wait > 0.0 and stats is not None:
+                    # the feed only records waits ending in a delivered batch;
+                    # fold the preceding timed-out polls back into starvation
+                    # (host-attributed: that is the scale-the-workers signal)
+                    # or the controller would see a starving feed as healthy.
+                    # Waits with NO eventual batch (stream over) stay
+                    # unrecorded, matching the feed's own rule.
+                    stats.starved_time_s += pending_wait
+                    stats.starved_host_s += pending_wait
+                if pending_wait:
+                    pending_wait = 0.0
+                yield b
+
         try:
-            for batch in feed:
+            for batch in batches():
                 ts = time.perf_counter()
                 stats = self.run_step(batch)
                 if record is not None:
@@ -142,6 +183,9 @@ class Trainer:
                           f"gnorm={stats['grad_norm']:.3f} ({dt:.1f}s)",
                           flush=True)
                 if max_steps and self.step >= max_steps:
+                    break
+                if (self.cfg.max_wall_s is not None
+                        and time.perf_counter() - t0 >= self.cfg.max_wall_s):
                     break
         finally:
             # break AND exception paths: release the transfer thread and any

@@ -1,0 +1,545 @@
+"""Streaming training subsystem (paper §3.2): bifurcated O2O protocol.
+
+Covers the protocol's correctness spine:
+  * generation leases retain superseded generations and GC on last release;
+  * pinned materialization reproduces the logged window byte-exact even after
+    a scrubbing compaction; unpinned remediation re-resolves + revalidates and
+    raises ``StaleGeneration`` when the window genuinely changed;
+  * deadline/size-bounded micro-batching with an unambiguous drain signal;
+  * the batch→stream catch-up handoff trains every request_id exactly once;
+  * STRESS: compaction cycling concurrently with snapshotting + streaming
+    materialization keeps ``audit()`` clean across >= 2 generation flips, in
+    both streaming and batch modes.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.consistency import audit, audit_streaming
+from repro.core.materialize import ChecksumMismatch, Materializer, StaleGeneration
+from repro.core.projection import TenantProjection
+from repro.core.simulation import ProductionSim, SimConfig
+from repro.dpp.featurize import FeatureSpec
+from repro.dpp.worker import DPPWorker
+from repro.storage.compaction import make_scrub
+from repro.storage.immutable_store import (
+    GenerationUnavailable,
+    ImmutableUIHStore,
+    ScanRequest,
+    Stripe,
+)
+from repro.storage.mutable_store import MutableUIHStore
+from repro.storage.stream import TrainingExampleStream, Warehouse
+from repro.streaming import (
+    BackfillCoordinator,
+    MicroBatchConfig,
+    StreamingSession,
+    StreamingSource,
+)
+
+
+def _sim(users=6, days=2, seed=0, req=3, mode="vlm"):
+    cfg = SimConfig(
+        stream=ev.StreamConfig(n_users=users, n_items=1_500, days=days + 2,
+                               events_per_user_day_mean=25.0, seed=seed),
+        stripe_len=16,
+        requests_per_user_day=req,
+        mode=mode,
+        seed=seed,
+        pin_generations=True,
+    )
+    sim = ProductionSim(cfg)
+    if days:
+        sim.run_days(days)
+    return sim
+
+
+def _refs_by_id(sim):
+    return {e.request_id: r for e, r in zip(sim.examples, sim.references)}
+
+
+# ---------------------------------------------------------------------------
+# satellites: stream drain signal, empty warehouse hours, evict cache reuse
+# ---------------------------------------------------------------------------
+
+def test_stream_drained_vs_timeout():
+    stream = TrainingExampleStream(ev.default_schema(), capacity=8)
+    assert stream.consume(timeout=0.01) is None   # timed out...
+    assert not stream.drained                     # ...but NOT exhausted
+    stream.close()
+    assert stream.consume(timeout=0.01) is None
+    assert stream.drained                         # closed AND empty
+
+
+def test_warehouse_missing_hour_reads_empty():
+    wh = Warehouse(ev.default_schema())
+    assert wh.read_partition(123) == []
+    assert list(wh.iter_bucketed(123)) == []
+    assert wh.bytes_read == 0
+
+
+def test_evict_until_reuses_merged_cache():
+    schema = ev.default_schema()
+    a = MutableUIHStore(schema)
+    b = MutableUIHStore(schema)
+    rng = np.random.default_rng(0)
+    for uid in range(4):
+        ts = np.sort(rng.integers(0, 1000, size=12))
+        batch = {
+            "timestamp": ts.astype(np.int64),
+            "item_id": rng.integers(0, 50, size=12).astype(np.int64),
+            "action_type": rng.integers(0, 4, size=12).astype(np.int64),
+            "watch_pct": rng.random(12).astype(np.float32),
+            "category": rng.integers(0, 8, size=12).astype(np.int64),
+            "creator_id": rng.integers(0, 9, size=12).astype(np.int64),
+        }
+        for store in (a, b):
+            store.append(uid, {k: v.copy() for k, v in batch.items()})
+    # warm a's cache via the read path; b evicts cold
+    for uid in range(4):
+        a.read(uid, -1, 10_000)
+    for store in (a, b):
+        store.evict_all_until(500)
+    assert a.evict_cache_hits == 4 and a.evict_merges == 0
+    assert b.evict_cache_hits == 0 and b.evict_merges == 4
+    for uid in range(4):
+        got_a = a.read(uid, -1, 10_000)
+        got_b = b.read(uid, -1, 10_000)
+        for k in got_a:
+            assert np.array_equal(got_a[k], got_b[k])
+        if ev.batch_len(got_a):
+            assert int(got_a["timestamp"].min()) > 500
+
+
+# ---------------------------------------------------------------------------
+# generation leases
+# ---------------------------------------------------------------------------
+
+def _tiny_tables(schema, n=8, t0=0):
+    from repro.storage import columnar
+
+    ts = np.arange(t0, t0 + n, dtype=np.int64)
+    batch = {
+        "timestamp": ts,
+        "item_id": np.arange(n, dtype=np.int64) + t0,
+        "action_type": np.zeros(n, dtype=np.int64),
+    }
+    blob = columnar.encode_stripe(
+        {k: batch[k] for k in ("timestamp", "item_id", "action_type")}, schema)
+    return {(0, "core"): [Stripe(start_ts=int(ts[0]), end_ts=int(ts[-1]),
+                                 n_events=n, blob=blob)]}
+
+
+def test_generation_lease_retain_and_gc():
+    schema = ev.default_schema()
+    store = ImmutableUIHStore(schema, n_shards=2)
+    store.bulk_load(_tiny_tables(schema, t0=0), generation=0)
+    lease = store.acquire_lease(0)
+    store.bulk_load(_tiny_tables(schema, t0=100), generation=1)
+    # gen 0 retained while leased; both generations scannable
+    assert store.retained_generations() == [0]
+    assert store.has_generation(0) and store.has_generation(1)
+    old = store.scan(ScanRequest(0, "core", 0, 10**12, generation=0))
+    new = store.scan(ScanRequest(0, "core", 0, 10**12, generation=-1))
+    assert int(old["timestamp"][0]) == 0 and int(new["timestamp"][0]) == 100
+    assert store.stats.pinned_scans == 1
+    assert store.retained_bytes() > 0
+    lease.release()
+    assert store.retained_generations() == []
+    assert store.lease_stats.generations_gc == 1
+    with pytest.raises(GenerationUnavailable):
+        store.scan(ScanRequest(0, "core", 0, 10**12, generation=0))
+    lease.release()  # idempotent
+    # unleased supersede drops the old generation immediately
+    store.bulk_load(_tiny_tables(schema, t0=200), generation=2)
+    assert store.retained_generations() == []
+    assert not store.has_generation(1)
+
+
+def test_lease_refcounting():
+    schema = ev.default_schema()
+    store = ImmutableUIHStore(schema, n_shards=2)
+    store.bulk_load(_tiny_tables(schema), generation=0)
+    l1, l2 = store.acquire_lease(0), store.acquire_lease(0)
+    store.bulk_load(_tiny_tables(schema, t0=50), generation=1)
+    l1.release()
+    assert store.has_generation(0)      # second lease still pins it
+    l2.release()
+    assert not store.has_generation(0)
+    with pytest.raises(GenerationUnavailable):
+        store.acquire_lease(0)
+
+
+# ---------------------------------------------------------------------------
+# stale-generation remediation + pinned materialization
+# ---------------------------------------------------------------------------
+
+def test_pinned_materialization_survives_scrubbing_compaction():
+    """A scrub that rewrites history between logging and training: the leased
+    (pinned) path reproduces the ORIGINAL window byte-exact; the unpinned
+    strict path raises StaleGeneration after failed re-resolution."""
+    sim = _sim(days=2, seed=11)
+    target = next(e for e in sim.examples if e.version.seq_len > 4)
+    ref = sim.references[sim.examples.index(target)]
+    assert sim.stream.pending_leases() > 0  # publisher pinned the generations
+
+    baseline = sim.materializer(validate_checksum=True).materialize(target)
+    item = int(np.bincount(baseline["item_id"]).argmax())
+    sim.run_compaction(sim.immutable.watermark(target.user_id),
+                       scrub=make_scrub(deleted_items=[item]))
+
+    # pinned: byte-exact reproduction of the logged window
+    pinned = sim.materializer(validate_checksum=True, pin_generations=True)
+    got = pinned.materialize(target)
+    for k in got:
+        assert np.array_equal(got[k], baseline[k])
+    assert pinned.stats.pinned_windows == 1
+    assert pinned.stats.stale_failures == 0
+
+    # drop the lease -> the generation is GC'd -> remediation must re-resolve
+    # against the scrubbed live generation and refuse the drifted window
+    sim.stream.release_leases()
+    assert not sim.immutable.has_generation(target.version.generation)
+    unpinned = sim.materializer(validate_checksum=True, pin_generations=True)
+    with pytest.raises(StaleGeneration):
+        unpinned.materialize(target)
+    assert unpinned.stats.pin_misses == 1
+    assert unpinned.stats.stale_failures == 1
+    # ...and StaleGeneration is still a ChecksumMismatch for legacy handlers
+    assert issubclass(StaleGeneration, ChecksumMismatch)
+
+
+def test_stale_reresolve_is_clean_without_scrub():
+    """Compaction without scrubs rebuilds identical windows: the re-resolve
+    remediation validates and audit stays clean even with every lease gone."""
+    sim = _sim(days=2, seed=5)
+    sim.stream.release_leases()
+    sim.run_compaction((sim.current_day + 1) * ev.MS_PER_DAY - 1)  # extra flip
+    mat = sim.materializer(validate_checksum=True, pin_generations=True)
+    report = audit(sim.examples, sim.references, mat, sim.schema)
+    assert report.clean
+    assert mat.stats.stale_reresolved > 0
+    assert mat.stats.stale_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# micro-batching
+# ---------------------------------------------------------------------------
+
+def test_micro_batch_size_and_deadline_flushes():
+    sim = _sim(days=1, seed=3)
+    src = StreamingSource(sim.stream,
+                         MicroBatchConfig(max_examples=4, max_delay_s=0.03,
+                                          poll_s=0.005))
+    it = src.micro_batches()
+    # backlog present -> size-bounded flushes
+    mb = next(it)
+    assert len(mb) == 4
+    assert src.stats.size_flushes == 1
+    # drain the backlog, then publish a lone trickle example: deadline flush
+    backlog = []
+    done = threading.Event()
+
+    def drain_until_deadline_flush():
+        for m in it:
+            backlog.append(m)
+            if src.stats.deadline_flushes:
+                break
+        done.set()
+
+    th = threading.Thread(target=drain_until_deadline_flush, daemon=True)
+    th.start()
+    time.sleep(0.2)   # let the backlog drain; stream is now empty
+    lone = sim.examples[0]
+    t0 = time.perf_counter()
+    sim.stream.publish(lone)
+    done.wait(timeout=5.0)
+    waited = time.perf_counter() - t0
+    assert src.stats.deadline_flushes == 1
+    assert len(backlog[-1]) < 4          # flushed short, by deadline
+    assert waited < 1.0                   # and promptly
+    sim.stream.close()
+    th.join(timeout=2.0)
+    # remaining iterator terminates on the drain signal
+    rest = list(it)
+    assert sim.stream.drained
+    total = sum(len(m) for m in backlog + rest) + 4
+    assert total == len(sim.examples) + 1  # lone example re-published
+
+
+# ---------------------------------------------------------------------------
+# batch->stream catch-up handoff
+# ---------------------------------------------------------------------------
+
+def test_backfill_handoff_exactly_once():
+    sim = _sim(users=8, days=2, seed=7, req=4)
+    n_history = len(sim.examples)
+    src = StreamingSource(sim.stream, MicroBatchConfig(max_examples=8))
+    coord = BackfillCoordinator(sim.warehouse, src, micro_batch=8)
+
+    def producer():
+        sim.run_day(2, capture_reference=True)   # live traffic + a gen flip
+        sim.stream.close()
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    trained = []
+    for mb in coord.micro_batches():
+        trained.extend(e.request_id for e in mb)
+    th.join()
+    st = coord.stats
+    # every request_id exactly once: no drops, no double-training at the flip
+    assert sorted(trained) == sorted(e.request_id for e in sim.examples)
+    assert len(set(trained)) == len(trained)
+    assert st.warehouse_examples == n_history
+    assert st.duplicates_skipped == n_history    # stream copies of history
+    assert st.stream_examples == len(sim.examples) - n_history > 0
+    assert st.watermark == n_history - 1
+    assert st.flipped
+    # duplicate-skip released the history leases; live ones drain via ack
+    src.ack([rid for rid in trained])
+    assert sim.stream.pending_leases() == 0
+
+
+def test_backfill_sweeps_contiguous_hours_with_gaps():
+    """The replay range is a contiguous hour sweep; hours without data (the
+    overnight gap between simulated days) read as empty, not KeyError."""
+    sim = _sim(users=4, days=2, seed=9)
+    src = StreamingSource(sim.stream, MicroBatchConfig(max_examples=16))
+    sim.stream.close()
+    coord = BackfillCoordinator(sim.warehouse, src, micro_batch=16)
+    n = sum(len(mb) for mb in coord.micro_batches())
+    hours = sim.warehouse.hours()
+    assert coord.stats.hours_replayed == hours[-1] - hours[0] + 1
+    assert coord.stats.empty_hours > 0
+    assert coord.stats.warehouse_examples == len(sim.examples)
+    # everything was replayed from the warehouse; stream copies all deduped
+    assert n == len(sim.examples)
+
+
+# ---------------------------------------------------------------------------
+# STRESS: concurrent compaction vs snapshotting + materialization (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_streaming_audit_clean_under_concurrent_compaction():
+    """Compaction publishes new generations WHILE traffic is being snapshotted
+    and a streaming consumer materializes in micro-batches. The audit must
+    stay clean (0 leaks, 0 O2O mismatches) across >= 2 generation flips, in
+    streaming mode during the run and batch mode after it."""
+    sim = _sim(users=6, days=1, seed=13, req=4)
+    gen_start = sim.immutable.generation
+    flips = [0]
+    # the producer publishes the established watermark; the churn thread
+    # re-compacts at exactly that watermark — identical window content, fresh
+    # generation id every time (pure generation churn under in-flight
+    # examples: the adversarial case for the lease protocol). A watermark
+    # that regressed or ran ahead would be a DIFFERENT pipeline bug, not the
+    # one under test.
+    wm_box = [1 * ev.MS_PER_DAY - 1]   # day-1 boundary: the next cycle's mark
+    stop = threading.Event()
+
+    def churn():
+        while not stop.is_set():
+            sim.run_compaction(wm_box[0], evict=False)
+            flips[0] += 1
+            time.sleep(0.004)
+
+    def producer():
+        try:
+            for day in (1, 2):
+                wm = day * ev.MS_PER_DAY - 1
+                sim.run_compaction(wm)
+                wm_box[0] = wm
+                sim.ingest_day_events(day)
+                sim.issue_requests(day, capture_reference=True)
+                sim.current_day = day
+        finally:
+            sim.stream.close()
+
+    comp = threading.Thread(target=churn, daemon=True)
+    prod = threading.Thread(target=producer, daemon=True)
+    comp.start()
+    prod.start()
+    # compaction churns CONCURRENTLY with snapshotting for the whole producer
+    # phase; the consumer starts against the accumulated backlog so that every
+    # queued example is guaranteed stale (its generation superseded many times
+    # over) while its lease still pins the original window — and churn keeps
+    # flipping generations CONCURRENTLY with materialization below
+    prod.join()
+    assert sim.stream.pending_leases() > 0
+    assert sim.immutable.retained_generations()   # leases held gens alive
+
+    src = StreamingSource(sim.stream, MicroBatchConfig(max_examples=8))
+    mat = sim.materializer(validate_checksum=True, pin_generations=True)
+    refs = {e.request_id: r
+            for e, r in zip(sim.examples, sim.references)}
+    report = audit_streaming(src.micro_batches(), refs, mat,
+                             sim.schema, ack=src.ack)
+    stop.set()
+    comp.join()
+
+    assert report.examples == len(sim.examples)
+    assert report.clean, (report, mat.stats)
+    assert flips[0] >= 2
+    assert sim.immutable.generation - gen_start >= 2
+    # streaming consumed+acked everything: no lease outlives its example,
+    # and the retained-generation set fully drains
+    assert sim.stream.pending_leases() == 0
+    assert sim.immutable.retained_generations() == []
+    # the backlog's windows materialized byte-exact from lease-retained
+    # generations (the pinned path really ran)
+    assert mat.stats.pinned_windows > 0
+    assert mat.stats.stale_failures == 0
+    assert sim.immutable.lease_stats.generations_gc > 0
+
+    # batch mode over the same traffic, AFTER all the churn (planned path)
+    batch_report = audit(sim.examples, sim.references,
+                         sim.materializer(validate_checksum=True,
+                                          pin_generations=True),
+                         sim.schema, batched=True)
+    assert batch_report.clean
+
+
+def test_session_drops_stale_examples_and_survives():
+    """A genuine window change (scrub) mid-stream must DROP the affected
+    examples — leases released, counted — while the session keeps training
+    the rest; it must not kill worker threads."""
+    sim = _sim(users=6, days=2, seed=21, req=3)
+    # make every in-flight window genuinely stale: release all pins, then
+    # re-compact with a scrub that rewrites history
+    sim.stream.release_leases()
+    uih = sim.materializer(validate_checksum=False).materialize(
+        next(e for e in sim.examples if e.version.seq_len > 4))
+    item = int(np.bincount(uih["item_id"]).argmax())
+    sim.run_compaction(sim.compaction_watermark,
+                       scrub=make_scrub(deleted_items=[item]))
+
+    tenant = TenantProjection(
+        "t", seq_len=24, feature_groups=("core",),
+        traits_per_group={"core": ("timestamp", "item_id", "action_type")})
+    spec = FeatureSpec(seq_len=24, uih_traits=("item_id", "action_type"))
+
+    def make_worker():
+        mat = sim.materializer(validate_checksum=True, pin_generations=True)
+        return DPPWorker(mat, tenant, spec, sim.schema)
+
+    session = StreamingSession(
+        sim.stream, make_worker, full_batch_size=8,
+        micro_batch=MicroBatchConfig(max_examples=8, max_delay_s=0.02),
+        n_workers=2).start()
+    sim.stream.close()
+
+    rows = 0
+    for batch in session:
+        rows += len(batch["uih_len"])
+    session.join()   # must not raise: stale examples were dropped, not fatal
+
+    total = len(sim.examples)
+    assert session.stale_dropped > 0          # the scrub really bit
+    assert rows + session.stale_dropped >= (total // 8) * 8  # rest trained
+    assert sim.stream.pending_leases() == 0   # dropped examples released too
+    mats = [w.materializer for w in session.pool._workers]
+    assert sum(m.stats.stale_failures for m in mats) > 0
+
+
+def test_pool_join_unblocks_after_total_worker_failure():
+    """All workers dying on a LIVE feed must not hang join(): the feeder is
+    parked on the bounded item queue and has to detect the dead pool, so the
+    worker error surfaces (and the client gets closed) instead of deadlock."""
+    from repro.dpp.elastic import DPPWorkerPool
+
+    class _Stats:
+        total_time_s = 0.0
+        busy_time_s = 0.0
+
+    class _BadWorker:
+        def __init__(self):
+            self.stats = _Stats()
+
+        def process(self, item):
+            raise ValueError("boom")
+
+    closed = []
+
+    class _Client:
+        stats = None
+
+        def put(self, b):
+            pass
+
+        def close(self):
+            closed.append(True)
+
+    def live_items():
+        while True:   # never-ending source: only the dead-pool check stops it
+            yield [1, 2, 3]
+
+    pool = DPPWorkerPool(lambda: _BadWorker(), _Client(), n_workers=2,
+                         jagged=False)
+    pool.start_stream(live_items(), max_buffered=4)
+    with pytest.raises(RuntimeError):
+        pool.join()
+    assert closed  # end-of-stream sentinel path still ran
+
+
+# ---------------------------------------------------------------------------
+# full streaming session: pool + client + freshness + exactly-once
+# ---------------------------------------------------------------------------
+
+def test_streaming_session_end_to_end():
+    sim = _sim(users=8, days=2, seed=1, req=4)
+    tenant = TenantProjection(
+        "t", seq_len=24, feature_groups=("core",),
+        traits_per_group={"core": ("timestamp", "item_id", "action_type")})
+    spec = FeatureSpec(seq_len=24, uih_traits=("item_id", "action_type"))
+    trained_ids = []
+    ids_lock = threading.Lock()
+
+    class _TrackingWorker(DPPWorker):
+        def process_jagged(self, examples):
+            with ids_lock:
+                trained_ids.extend(e.request_id for e in examples)
+            return super().process_jagged(examples)
+
+    def make_worker():
+        mat = sim.materializer(validate_checksum=True, pin_generations=True)
+        return _TrackingWorker(mat, tenant, spec, sim.schema)
+
+    session = StreamingSession(
+        sim.stream, make_worker, full_batch_size=16,
+        micro_batch=MicroBatchConfig(max_examples=8, max_delay_s=0.02),
+        n_workers=2, backfill_from=sim.warehouse).start()
+
+    def producer():
+        sim.run_day(2, capture_reference=False)
+        sim.stream.close()
+
+    prod = threading.Thread(target=producer, daemon=True)
+    prod.start()
+
+    rows = 0
+    for batch in session:
+        assert batch["uih_item_id"].shape[1] == 24
+        rows += len(batch["uih_len"])
+        session.record_train_step(0.0005)
+        session.recycle(batch)
+    session.join()
+    prod.join()
+
+    total = len(sim.examples)
+    st = session.backfill_stats
+    assert st.warehouse_examples + st.stream_examples == total
+    assert sorted(trained_ids) == sorted(e.request_id for e in sim.examples)
+    assert rows == (total // 16) * 16 + total % 16   # tail flushed too
+    # freshness metrics populated for the live phase
+    fr = session.freshness
+    assert fr.batches_delivered > 0 and fr.samples > 0
+    assert fr.event_to_gradient_s_max >= fr.mean_event_to_gradient_s > 0
+    assert session.source.stats.micro_batches > 0
+    # drained: every lease released, nothing retained
+    assert sim.stream.pending_leases() == 0
+    assert sim.immutable.retained_generations() == []
