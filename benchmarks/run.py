@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_scan_plan",
     "benchmarks.bench_rebatch",
     "benchmarks.bench_feed",
+    "benchmarks.bench_multitenant",
     "benchmarks.bench_streaming",
     "benchmarks.bench_kernels",
     "benchmarks.fig4_ne_scaling",

@@ -11,6 +11,7 @@ from repro.core import events as ev
 from repro.core.consistency import batches_equal, future_leakage_count
 from repro.core.projection import TenantProjection
 from repro.core.simulation import ProductionSim, SimConfig
+from repro.data import DatasetSpec, SimSource, open_feed
 
 
 def main() -> None:
@@ -51,6 +52,22 @@ def main() -> None:
           f"traits={sorted(small.keys())}")
     print(f"  bytes scanned: {d.bytes_scanned} (projection pushdown), "
           f"stripes read: {d.stripes_read}, seeks: {d.seeks}")
+
+    # --- the declarative read path: DatasetSpec -> open_feed -> Feed ---
+    # one frozen spec describes the whole pipeline (source, projection,
+    # consistency, batching); the compiler wires the data plane
+    ds = DatasetSpec(tenant=short, source=SimSource(epochs=1),
+                     consistency="audit", batch_size=8, base_batch_size=4,
+                     n_workers=1)
+    with open_feed(ds, sim) as feed:
+        batch = next(iter(feed))
+        print(f"\nopen_feed({ds.tenant.name!r}): first full batch "
+              f"{len(batch['uih_len'])} rows, "
+              f"uih_item_id {batch['uih_item_id'].shape}")
+        for _ in feed:        # drain so the pool exits, then close via `with`
+            pass
+    print(f"  feed drained: {feed.drained}; "
+          f"worker examples: {feed.stats().workers.examples}")
 
 
 if __name__ == "__main__":

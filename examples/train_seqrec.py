@@ -1,16 +1,17 @@
 """End-to-end training driver: the complete stack, one process.
 
   synthetic traffic -> mutable/immutable tiers -> VLM snapshots -> warehouse
-  -> elastic DPP worker pool (affinity-planned items, vectorized featurize)
-  -> slot-based rebatching client -> double-buffered device prefetcher
+  -> declarative read path: DatasetSpec -> open_feed (elastic DPP pool,
+     vectorized featurize, slot-based rebatching, device prefetch)
   -> DLRM-UIH trainer (AdamW, grad accumulation, crash-safe checkpointing).
 
 Run:  PYTHONPATH=src python examples/train_seqrec.py [--steps 200] [--resume]
 The model is the paper's flagship tenant (DLRM + UIH transformer encoder) at a
 CPU-sized config; the same driver drives pod-scale meshes via --arch configs.
+The feed is ONE DatasetSpec — adding a tenant means writing another spec, not
+another pipeline.
 """
 import argparse
-import threading
 import time
 
 import jax
@@ -20,12 +21,9 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.projection import TenantProjection
 from repro.core.simulation import ProductionSim, SimConfig
-from repro.dpp.affinity import plan_affine
-from repro.dpp.client import RebatchingClient
-from repro.dpp.elastic import DPPWorkerPool, ElasticConfig, ElasticController
+from repro.data import DatasetSpec, SimSource, open_feed
+from repro.dpp.elastic import ElasticConfig, ElasticController
 from repro.dpp.featurize import FeatureSpec
-from repro.dpp.prefetch import DevicePrefetcher
-from repro.dpp.worker import DPPWorker
 from repro.models import recsys as R
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import Trainer, TrainerConfig
@@ -35,57 +33,34 @@ BATCH = 32
 BASE_BATCH = 8
 
 
-def build_pipeline(seed: int = 0):
+def build_sim(seed: int = 0) -> ProductionSim:
     sim = ProductionSim(SimConfig(
         stream=ev.StreamConfig(n_users=32, n_items=4_000, days=7,
                                events_per_user_day_mean=40.0, seed=seed),
         stripe_len=32, requests_per_user_day=6, seed=seed,
     ))
     sim.run_days(6, capture_reference=False)
+    return sim
+
+
+def dataset_spec(steps: int, prefetch: bool) -> DatasetSpec:
+    """The whole feed, declaratively: tenant projection + source + knobs."""
     tenant = TenantProjection(
         "dlrm-uih", seq_len=SEQ_LEN,
         feature_groups=("core", "sideinfo"),
         traits_per_group={"core": ("timestamp", "item_id", "action_type"),
                           "sideinfo": ("category",)})
-    spec = FeatureSpec(seq_len=SEQ_LEN,
-                       uih_traits=("item_id", "action_type", "category"),
-                       candidate_fields=("item_id",), label_fields=("click",))
-
-    def make_worker():
-        mat = sim.materializer(validate_checksum=False)
-        mat.window_cache_size = 256
-        return DPPWorker(mat, tenant, spec, sim.schema)
-
-    return sim, make_worker
-
-
-def start_feed(sim, make_worker, steps: int, seed=0):
-    """Elastic DPP pool producing shuffled affinity-planned epochs into a
-    slot-based rebatching client, until ``steps`` full batches are covered."""
-    client = RebatchingClient(BATCH, buffer_batches=4, shuffle_seed=seed)
-    n_shards = sim.immutable.router.n_shards
-    rng = np.random.default_rng(seed)
-    need = steps * BATCH + BATCH  # rows to cover the run (+1 batch of slack)
-    items = []
-    while need > 0:
-        order = rng.permutation(len(sim.examples))
-        epoch = [sim.examples[i] for i in order]
-        items.extend(plan_affine(epoch, n_shards, BASE_BATCH).items)
-        need -= len(epoch)
-    pool = DPPWorkerPool(
-        make_worker, client, n_workers=2,
-        controller=ElasticController(ElasticConfig(min_workers=1, max_workers=8)))
-    pool.start(items)
-
-    def background_join():
-        try:
-            pool.join()   # closes the client even on worker failure
-        except RuntimeError:
-            import traceback
-            traceback.print_exc()
-
-    threading.Thread(target=background_join, daemon=True).start()
-    return client, pool
+    features = FeatureSpec(seq_len=SEQ_LEN,
+                           uih_traits=("item_id", "action_type", "category"),
+                           candidate_fields=("item_id",),
+                           label_fields=("click",))
+    return DatasetSpec(
+        tenant=tenant,
+        source=SimSource(min_rows=steps * BATCH + BATCH),  # cover the run
+        batch_size=BATCH, base_batch_size=BASE_BATCH,
+        prefetch_depth=2 if prefetch else 0,
+        n_workers=2, window_cache_size=256, features=features,
+    )
 
 
 def prep(b, cfg):
@@ -109,7 +84,7 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_seqrec_ckpt")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--no-prefetch", action="store_true",
-                    help="bypass the device prefetcher (seed-style sync feed)")
+                    help="host-only feed (seed-style sync device transfer)")
     args = ap.parse_args()
 
     cfg = R.DLRMUIHConfig(
@@ -120,7 +95,7 @@ def main() -> None:
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"DLRM-UIH: {n_params/1e6:.2f}M params, seq_len={SEQ_LEN}")
 
-    sim, make_worker = build_pipeline()
+    sim = build_sim()
     trainer = Trainer(
         lambda p, b: R.dlrm_uih_loss(p, b, cfg), params,
         TrainerConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=20,
@@ -130,35 +105,27 @@ def main() -> None:
     if args.resume and trainer.try_resume():
         print(f"resumed from step {trainer.step}")
 
-    client, pool = start_feed(sim, make_worker, args.steps)
-    if args.no_prefetch:
-        class _SyncFeed:  # seed-style: prep + transfer inside the step loop
-            def __iter__(self):
-                for b in client:
-                    yield {k: jnp.asarray(v) for k, v in prep(b, cfg).items()}
-
-            def record_train_step(self, s):
-                client.record_train_step(s)
-
-        feed = _SyncFeed()
-    else:
-        feed = DevicePrefetcher(client, depth=2,
-                                prep_fn=lambda b: prep(b, cfg))
-
+    # ONE declarative call replaces the old hand-wired client/pool/prefetcher
+    feed = open_feed(
+        dataset_spec(args.steps, prefetch=not args.no_prefetch), sim,
+        prep_fn=lambda b: prep(b, cfg),
+        controller=ElasticController(ElasticConfig(min_workers=1,
+                                                   max_workers=8)))
     t0 = time.perf_counter()
     trainer.fit(feed, max_steps=args.steps)
     dt = time.perf_counter() - t0
+    feed.close(timeout=10.0)   # drain leftover items so workers exit cleanly
     first = np.mean([h["loss"] for h in trainer.history[:10]])
     last = np.mean([h["loss"] for h in trainer.history[-10:]])
-    cs = client.stats
-    ws = pool.merged_worker_stats()
+    st = feed.stats()
+    cs, ws = st.client, st.workers
     print(f"\ntrained {trainer.step} steps in {dt:.1f}s "
           f"({trainer.step / dt:.1f} steps/s)")
     print(f"loss {first:.4f} -> {last:.4f}")
     print(f"feed: starvation {cs.starvation_pct:.1f}% "
           f"(host {cs.starved_host_s*1e3:.0f}ms, h2d {cs.starved_h2d_s*1e3:.0f}ms), "
           f"h2d total {cs.h2d_time_s*1e3:.0f}ms, slot reuses {cs.slot_reuses}, "
-          f"peak workers {pool.peak_workers}, worker waste {ws.waste_pct:.1f}%")
+          f"peak workers {st.peak_workers}, worker waste {ws.waste_pct:.1f}%")
     print(f"featurize {ws.featurize_time_s*1e3:.0f}ms over "
           f"{ws.examples} examples ({ws.base_batches} base batches)")
 

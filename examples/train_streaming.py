@@ -8,6 +8,11 @@ while LIVE traffic keeps arriving AND daily compaction publishes new
 immutable generations underneath — the generation-lease protocol keeps every
 materialized window byte-exact to what the ranking service saw.
 
+The whole pipeline is ONE declarative spec: the same ``DatasetSpec`` ->
+``open_feed`` -> ``Feed`` path the batch driver uses, with
+``source=StreamSource(...)`` and ``generations="pinned"`` — batch vs
+streaming is a spec field, not a second code path.
+
 Run:  PYTHONPATH=src python examples/train_streaming.py [--live-days 2]
 """
 import argparse
@@ -21,11 +26,9 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.projection import TenantProjection
 from repro.core.simulation import ProductionSim, SimConfig
+from repro.data import DatasetSpec, StreamSource, open_feed
 from repro.dpp.featurize import FeatureSpec
-from repro.dpp.prefetch import DevicePrefetcher
-from repro.dpp.worker import DPPWorker
 from repro.models import recsys as R
-from repro.streaming import MicroBatchConfig, StreamingSession
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import Trainer, TrainerConfig
 
@@ -60,19 +63,18 @@ def main() -> None:
         feature_groups=("core", "sideinfo"),
         traits_per_group={"core": ("timestamp", "item_id", "action_type"),
                           "sideinfo": ("category",)})
-    spec = FeatureSpec(seq_len=SEQ_LEN,
-                       uih_traits=("item_id", "action_type", "category"),
-                       candidate_fields=("item_id",), label_fields=("click",))
-
-    def make_worker():
-        mat = sim.materializer(validate_checksum=True, pin_generations=True)
-        mat.window_cache_size = 256
-        return DPPWorker(mat, tenant, spec, sim.schema)
-
-    session = StreamingSession(
-        sim.stream, make_worker, full_batch_size=BATCH,
-        micro_batch=MicroBatchConfig(max_examples=8, max_delay_s=0.05),
-        n_workers=2, backfill_from=sim.warehouse).start()
+    spec = DatasetSpec(
+        tenant=tenant,
+        source=StreamSource(backfill=True, micro_batch_examples=8,
+                            micro_batch_delay_s=0.05),
+        consistency="audit",        # checksum-validate every full window (O2O)
+        generations="pinned",       # scan the logged (leased) generation
+        batch_size=BATCH, prefetch_depth=2, n_workers=2,
+        window_cache_size=256,
+        features=FeatureSpec(seq_len=SEQ_LEN,
+                             uih_traits=("item_id", "action_type", "category"),
+                             candidate_fields=("item_id",),
+                             label_fields=("click",)))
 
     def producer():
         try:
@@ -112,18 +114,19 @@ def main() -> None:
                       grad_accum=2, log_every=20,
                       max_wall_s=args.max_wall_s))
 
-    feed = DevicePrefetcher(session, depth=2, prep_fn=prep)
+    feed = open_feed(spec, sim, prep_fn=prep)
     t0 = time.perf_counter()
     trainer.fit(feed)   # runs until the stream drains (or max_wall_s)
     dt = time.perf_counter() - t0
-    # stop() (not join()): if the wall bound fired first, the remaining
+    # close() (not join()): if the wall bound fired first, the remaining
     # stream must be drained untrained so blocked workers can shut down
-    session.stop()
+    feed.close()
     prod.join()
 
+    session = feed.session
     bf = session.backfill_stats
-    fr = session.freshness
-    cs = session.stats
+    st = feed.stats()
+    fr, cs = st.freshness, st.client
     ls = sim.immutable.lease_stats
     total = len(sim.examples)
     print(f"\ntrained {trainer.step} steps in {dt:.1f}s "
@@ -141,7 +144,7 @@ def main() -> None:
     print(f"generations: live={sim.immutable.generation}, leases "
           f"{ls.acquired} acquired / {ls.released} released, "
           f"{ls.generations_retained} retained / {ls.generations_gc} GC'd")
-    ws = session.merged_worker_stats()
+    ws = st.workers
     mats = [w.materializer for w in session.pool._workers]
     pinned = sum(m.stats.pinned_windows for m in mats)
     stale = sum(m.stats.stale_reresolved for m in mats)

@@ -170,6 +170,24 @@ def project_traits(batch: EventBatch, traits: Sequence[str]) -> EventBatch:
     return {k: batch[k] for k in traits}
 
 
+def tail_view(batch: EventBatch, max_events: int,
+              traits: Optional[Sequence[str]] = None) -> EventBatch:
+    """THE carve rule of the multi-dimensional projection (§4.1.2): keep the
+    most recent ``max_events`` events (-1 = all), then project to the given
+    ``traits`` that are present (in that order).
+
+    Shared by scan trimming (``_scan_into``), plan subsumption
+    (``ImmutableUIHStore._carve``) and union-window tenant views
+    (``projection.project_view``) — one implementation is what makes the
+    "carved view == solo scan" byte-identity hold by construction."""
+    n = batch_len(batch)
+    if max_events >= 0 and n > max_events:
+        batch = slice_batch(batch, n - max_events, n)
+    if traits is not None:
+        batch = project_traits(batch, [t for t in traits if t in batch])
+    return batch
+
+
 def merge_sorted(batches: Sequence[EventBatch]) -> EventBatch:
     """k-way merge by timestamp (stable). Used by mutable-store merge-on-read and
     by compaction. Inputs may individually be unsorted (blind-write appends)."""

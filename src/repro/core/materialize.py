@@ -52,7 +52,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import events as ev
-from repro.core.projection import TenantProjection
+from repro.core.projection import TenantProjection, project_view
 from repro.core.versioning import TrainingExample, window_checksum
 from repro.storage.immutable_store import (
     GenerationUnavailable,
@@ -88,6 +88,28 @@ class StaleGeneration(ChecksumMismatch):
     """The example references a superseded immutable generation whose window is
     no longer reconstructible from the live generation (e.g. right-to-delete
     scrubs changed the event set) and is no longer lease-retained."""
+
+
+@dataclasses.dataclass
+class TenantShareStats:
+    """Multi-tenant co-scan amplification accounting (§2.3, Table 1).
+
+    Byte figures are *metadata-exact estimates* (``ImmutableUIHStore.
+    estimate_scan`` walks the same stripe selection the scan executes, so
+    they match ``IOStats.bytes_scanned`` for a stable generation) — computed
+    per co-scanned window against what each tenant's solo scan would have
+    read. Caveat: with ``generations="live"`` the estimate runs after the
+    fetch, so a compaction flip racing the two makes that window's figures
+    reflect the new generation's stripes — best-effort under churn (pinned
+    windows estimate against their retained generation and stay exact; a
+    GC'd generation skips accounting rather than guessing)."""
+
+    co_scans: int = 0                # materialize_multi calls that hit the store
+    co_scan_windows: int = 0         # unique windows fetched ONCE for N tenants
+    union_bytes_est: int = 0         # blob bytes the union co-scan reads
+    solo_bytes_est: int = 0          # Σ blob bytes the per-tenant solo scans would read
+    bytes_saved_vs_solo: int = 0     # solo_bytes_est - union_bytes_est (signed)
+    union_overfetch_bytes: int = 0   # union bytes beyond the WIDEST single tenant
 
 
 @dataclasses.dataclass
@@ -179,8 +201,105 @@ class Materializer:
                 continue
             members.setdefault(self._window_key(ex, projection), []).append(i)
 
-        # 2) resolve each unique window: cross-batch LRU first, else collect
-        #    canonicalized requests for one planned store round-trip
+        windows, _ = self._resolve_windows(members, examples, projection)
+
+        # reassemble per-example UIHs from the shared windows
+        for key, idxs in members.items():
+            imm = windows[key]
+            for i in idxs:
+                ex = examples[i]
+                mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
+                out[i] = self._concat_and_project(imm, mutable_part, projection)
+                self.stats.examples += 1
+                self.stats.immutable_events += ev.batch_len(imm)
+                self.stats.mutable_events += ev.batch_len(mutable_part)
+        return out  # type: ignore[return-value]
+
+    def materialize_multi(
+        self,
+        examples: Sequence[TrainingExample],
+        projections: Sequence[TenantProjection],
+        share_stats: Optional[TenantShareStats] = None,
+        union: Optional[TenantProjection] = None,
+    ) -> Dict[str, List[ev.EventBatch]]:
+        """Co-scan materialization for N tenants over ONE window fetch (§2.3,
+        §4.2.2): the batch's windows are fetched under the tenants' *union*
+        projection (max ``seq_len``, union of feature groups / traits) in one
+        planned store round-trip, then each tenant's view is carved host-side
+        (``project_view``: tail-slice to its ``seq_len`` + trait projection) —
+        byte-identical to that tenant's solo ``materialize_batch`` output.
+
+        ``share_stats`` (optional) accumulates the co-scan's amplification
+        savings per fetched window: what every tenant's solo scan would have
+        read vs what the union scan reads (``TenantShareStats``).
+        ``union`` (optional): the precomputed union of ``projections`` — a
+        long-lived caller computes it once instead of per batch.
+
+        Returns ``{tenant.name: [per-example EventBatch]}``. Stats semantics:
+        ``stats.examples`` counts per-tenant *outputs* (N per source example),
+        matching what N solo passes would have recorded."""
+        projections = list(projections)
+        if not projections:
+            raise ValueError("materialize_multi needs at least one projection")
+        names = [p.name for p in projections]
+        if len(set(names)) != len(names):
+            raise ValueError(f"tenant names must be unique, got {names}")
+        if union is None:  # a long-lived caller (planner) passes its own
+            union = (projections[0] if len(projections) == 1
+                     else TenantProjection.union(projections, self.schema))
+
+        out: Dict[str, List[Optional[ev.EventBatch]]] = {
+            p.name: [None] * len(examples) for p in projections}
+        members: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for i, ex in enumerate(examples):
+            if ex.is_fat or ex.version is None:
+                for p in projections:
+                    out[p.name][i] = self.materialize(ex, p)
+                continue
+            members.setdefault(self._window_key(ex, union), []).append(i)
+
+        windows, fetched = self._resolve_windows(members, examples, union)
+        if share_stats is not None and fetched:
+            self._account_share(fetched, projections, union, share_stats)
+
+        for key, idxs in members.items():
+            imm = windows[key]
+            # carve once per (window, tenant), shared across member examples;
+            # a tenant that IS the union (N=1) uses the window as fetched —
+            # it was scanned under exactly that projection, the carve is a
+            # no-op re-slice/re-project
+            views = {p.name: (imm if p is union
+                              else project_view(imm, p, self.schema))
+                     for p in projections}
+            for i in idxs:
+                ex = examples[i]
+                mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
+                for p in projections:
+                    view = views[p.name]
+                    out[p.name][i] = self._concat_and_project(
+                        view, mutable_part, p)
+                    self.stats.examples += 1
+                    self.stats.immutable_events += ev.batch_len(view)
+                    self.stats.mutable_events += ev.batch_len(mutable_part)
+        return out  # type: ignore[return-value]
+
+    def _resolve_windows(
+        self,
+        members: "OrderedDict[tuple, List[int]]",
+        examples: Sequence[TrainingExample],
+        projection: Optional[TenantProjection],
+    ):
+        """Resolve every unique window key: cross-batch LRU first, then ONE
+        planned store round-trip for the misses (with pin-race retry: a pinned
+        generation's last lease can release between the availability check and
+        the scan — demote ONLY the vanished windows to live re-resolution, so
+        a still-leased sibling window keeps its byte-exact pinned service).
+        The per-window decision is resolved once (counting each pin miss
+        exactly once) and only demoted on retries, never re-derived.
+
+        Returns ``(windows, fetched)`` where ``fetched`` lists the
+        ``(key, representative_example, generation)`` triples that actually
+        hit the store (cache hits excluded)."""
         windows: dict = {}
         to_fetch: List[Tuple[tuple, TrainingExample, int]] = []  # key, rep, n_members
         for key, idxs in members.items():
@@ -191,13 +310,6 @@ class Materializer:
                 continue
             to_fetch.append((key, examples[idxs[0]], len(idxs)))
 
-        # 3) single store round-trip for all missing windows (with pin-race
-        #    retry: a pinned generation's last lease can release between the
-        #    availability check and the scan — demote ONLY the vanished
-        #    windows to live re-resolution, so a still-leased sibling window
-        #    keeps its byte-exact pinned service). The per-window decision is
-        #    resolved once (counting each pin miss exactly once) and only
-        #    demoted on retries, never re-derived.
         gens: dict = {key: self._window_generation(rep)
                       for key, rep, _ in to_fetch}
 
@@ -215,6 +327,7 @@ class Materializer:
                 spans.append((key, rep, lo, lo + len(canonical), gen))
             return reqs, spans
 
+        fetched: List[Tuple[tuple, TrainingExample, int]] = []
         if to_fetch:
             while True:
                 reqs, fetch_spans = collect()
@@ -241,18 +354,37 @@ class Materializer:
                 self.stats.windows_fetched += 1
                 windows[key] = imm
                 self._window_cache_put(key, imm)
+                fetched.append((key, rep, gen))
+        return windows, fetched
 
-        # 4) reassemble per-example UIHs from the shared windows
-        for key, idxs in members.items():
-            imm = windows[key]
-            for i in idxs:
-                ex = examples[i]
-                mutable_part = ex.mutable_uih or ev.empty_batch(self.schema)
-                out[i] = self._concat_and_project(imm, mutable_part, projection)
-                self.stats.examples += 1
-                self.stats.immutable_events += ev.batch_len(imm)
-                self.stats.mutable_events += ev.batch_len(mutable_part)
-        return out  # type: ignore[return-value]
+    def _account_share(
+        self,
+        fetched: Sequence[Tuple[tuple, TrainingExample, int]],
+        projections: Sequence[TenantProjection],
+        union: TenantProjection,
+        share_stats: TenantShareStats,
+    ) -> None:
+        """Per fetched window: what each tenant's solo scan WOULD read vs what
+        the union co-scan reads, via the store's metadata-exact estimator."""
+        store = self.immutable
+        share_stats.co_scans += 1
+        for key, rep, gen in fetched:
+            try:
+                union_b = sum(
+                    store.estimate_scan(r)[1]
+                    for r in self._requests_for(rep, union, gen))
+                solo = [
+                    sum(store.estimate_scan(r)[1]
+                        for r in self._requests_for(rep, p, gen))
+                    for p in projections
+                ]
+            except GenerationUnavailable:
+                continue  # the generation flipped after the fetch; skip
+            share_stats.co_scan_windows += 1
+            share_stats.union_bytes_est += union_b
+            share_stats.solo_bytes_est += sum(solo)
+            share_stats.bytes_saved_vs_solo += sum(solo) - union_b
+            share_stats.union_overfetch_bytes += max(0, union_b - max(solo))
 
     # -- helpers ---------------------------------------------------------------
     def _window_key(

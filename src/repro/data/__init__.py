@@ -1,0 +1,41 @@
+"""Declarative read path (paper §2.3, §4.2): ``DatasetSpec`` → ``Feed``.
+
+The data-access front door: describe WHAT a tenant consumes in a frozen,
+hashable ``DatasetSpec`` (source, ``TenantProjection``, consistency mode,
+generation policy, feed knobs); ``open_feed`` compiles it into the existing
+data plane (materialization → DPP workers → rebatching → optional device
+prefetch) and hands back ONE uniform ``Feed`` protocol, consumed identically
+by the ``Trainer`` for batch and streaming. ``MultiTenantPlanner`` co-plans N
+specs over the same store into one union co-scan with per-tenant carved views
+(``TenantShareStats`` proves the amplification win). The legacy
+``launch.steps.make_device_feed`` / ``make_streaming_feed`` helpers are
+deprecated shims over this package.
+"""
+from repro.core.materialize import TenantShareStats
+from repro.data.compile import (
+    cell_input_sharding,
+    compile_worker_plan,
+    open_feed,
+)
+from repro.data.feed import Feed, FeedStats
+from repro.data.planner import MultiTenantPlanner
+from repro.data.spec import (
+    DatasetSpec,
+    SimSource,
+    StreamSource,
+    WarehouseSource,
+)
+
+__all__ = [
+    "DatasetSpec",
+    "Feed",
+    "FeedStats",
+    "MultiTenantPlanner",
+    "SimSource",
+    "StreamSource",
+    "TenantShareStats",
+    "WarehouseSource",
+    "cell_input_sharding",
+    "compile_worker_plan",
+    "open_feed",
+]

@@ -1,0 +1,175 @@
+"""``open_feed``: compile a declarative ``DatasetSpec`` into the data plane.
+
+One compiler replaces the two hand-wired pipelines that used to live in
+``launch.steps`` (``make_device_feed`` for batch, ``make_streaming_feed`` for
+streaming — both now thin deprecated shims):
+
+  batch  spec --> work items (warehouse buckets | affinity-planned sim epochs)
+                 --> DPPWorkerPool(WorkerPlan) --> RebatchingClient
+  stream spec --> StreamingSession (micro-batching, backfill handoff,
+                 generation-lease release, freshness)
+  either --> optional DevicePrefetcher stage (cell-sharded device batches)
+  --> Feed  (one protocol, consumed identically by the Trainer)
+
+The ``sim`` argument is the data-platform handle: a ``ProductionSim`` or any
+object exposing ``schema``, ``immutable`` (the store), plus ``warehouse`` /
+``stream`` / ``examples`` for the matching source kinds.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.core.materialize import Materializer
+from repro.data.feed import Feed
+from repro.data.spec import DatasetSpec, SimSource, StreamSource, WarehouseSource
+from repro.dpp.affinity import plan_affine
+from repro.dpp.client import RebatchingClient
+from repro.dpp.elastic import DPPWorkerPool
+from repro.dpp.worker import WorkerPlan
+
+
+def compile_worker_plan(spec: DatasetSpec, sim: Any) -> WorkerPlan:
+    """The per-worker slice of a spec: projection + features + a thread-local
+    materializer factory carrying the spec's consistency/generation policy."""
+    schema = sim.schema
+    store = sim.immutable
+    features = spec.resolve_features(schema)
+
+    def make_materializer() -> Materializer:
+        return Materializer(
+            store, schema,
+            validate_checksum=spec.validate_checksum,
+            pin_generations=spec.pin_generations,
+            window_cache_size=spec.window_cache_size,
+        )
+
+    return WorkerPlan(projection=spec.tenant, feature_spec=features,
+                      schema=schema, make_materializer=make_materializer)
+
+
+def _batch_items(spec: DatasetSpec, sim: Any) -> List[list]:
+    """The batch work list a spec describes (each item = one worker unit)."""
+    src = spec.source
+    bb = spec.base_batch_size
+    if isinstance(src, WarehouseSource):
+        hours = (list(src.hours) if src.hours is not None
+                 else sim.warehouse.hours())
+        items: List[list] = []
+        for _ in range(src.epochs):
+            for hour in hours:
+                # buckets ARE the affinity plan: user-clustered at ingestion,
+                # bucket key == storage shard key (§4.2.3)
+                for bucket in sim.warehouse.iter_bucketed(hour):
+                    for lo in range(0, len(bucket), bb):
+                        items.append(bucket[lo:lo + bb])
+        return items
+    assert isinstance(src, SimSource)
+    examples = list(sim.examples)
+    if not examples:
+        return []
+    n_shards = sim.immutable.router.n_shards
+    rng = np.random.default_rng(spec.reshuffle_seed or 0)
+    items = []
+    rows, epoch_i = 0, 0
+    while True:
+        epoch = ([examples[i] for i in rng.permutation(len(examples))]
+                 if src.shuffle else list(examples))
+        items.extend(plan_affine(epoch, n_shards, bb).items)
+        rows += len(epoch)
+        epoch_i += 1
+        if src.min_rows is not None:
+            if rows >= src.min_rows:
+                break
+        elif epoch_i >= src.epochs:
+            break
+    return items
+
+
+def cell_input_sharding(cell: Any, mesh: Any):
+    """NamedSharding tree for a cell's batch argument (device feed target)."""
+    if cell is None or mesh is None:
+        return None
+    import jax
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    batch_spec = cell.in_shardings[-1]
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        batch_spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def open_feed(
+    spec: DatasetSpec,
+    sim: Any,
+    *,
+    cell: Any = None,
+    mesh: Any = None,
+    prep_fn=None,
+    controller: Any = None,
+) -> Feed:
+    """Compile ``spec`` against ``sim``'s data platform and start the feed.
+
+    * ``cell``/``mesh`` (optional) — target the device-prefetch stage at a
+      ``launch.steps.Cell``'s batch shardings (device batches land laid out
+      exactly as the jit'd step expects);
+    * ``prep_fn`` — model-specific host transform; runs inside the prefetch
+      thread when there is one, else on the consumer's ``get``;
+    * ``controller`` — optional ``ElasticController`` for live pool resizing.
+
+    Returns a started ``Feed``; batch and streaming specs yield the same
+    protocol. The caller owns shutdown: ``close()`` (or iterate to
+    exhaustion + ``join()``).
+    """
+    plan = compile_worker_plan(spec, sim)
+    # prefetch_depth=None means auto (device stage iff a cell is targeted);
+    # an explicit 0 FORCES the host feed even with a cell
+    depth = (spec.prefetch_depth if spec.prefetch_depth is not None
+             else (2 if cell is not None else 0))
+    sharding = cell_input_sharding(cell, mesh)
+
+    if isinstance(spec.source, StreamSource):
+        from repro.streaming.session import StreamingSession
+        from repro.streaming.source import MicroBatchConfig
+
+        session = StreamingSession(
+            sim.stream, plan,
+            full_batch_size=spec.batch_size,
+            micro_batch=MicroBatchConfig(
+                max_examples=spec.source.micro_batch_examples,
+                max_delay_s=spec.source.micro_batch_delay_s),
+            n_workers=spec.n_workers,
+            controller=controller,
+            shuffle_seed=spec.reshuffle_seed,
+            buffer_batches=spec.buffer_batches,
+            backfill_from=sim.warehouse if spec.source.backfill else None,
+        ).start()
+        prefetcher = None
+        inner: Any = session
+        if depth > 0:
+            from repro.dpp.prefetch import DevicePrefetcher
+
+            prefetcher = DevicePrefetcher(session, depth=depth,
+                                          sharding=sharding, prep_fn=prep_fn)
+            inner = prefetcher
+        return Feed(inner, session=session, prefetcher=prefetcher,
+                    prep_fn=prep_fn, spec=spec)
+
+    client = RebatchingClient(spec.batch_size,
+                              buffer_batches=spec.buffer_batches,
+                              shuffle_seed=spec.reshuffle_seed)
+    pool = DPPWorkerPool.from_plan(plan, client, n_workers=spec.n_workers,
+                                   controller=controller)
+    pool.start(_batch_items(spec, sim))
+    prefetcher = None
+    inner = client
+    if depth > 0:
+        from repro.dpp.prefetch import DevicePrefetcher
+
+        prefetcher = DevicePrefetcher(client, depth=depth, sharding=sharding,
+                                      prep_fn=prep_fn)
+        inner = prefetcher
+    return Feed(inner, client=client, pool=pool, prefetcher=prefetcher,
+                prep_fn=prep_fn, spec=spec)

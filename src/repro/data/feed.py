@@ -1,0 +1,256 @@
+"""The uniform ``Feed``: one handle over the compiled read path.
+
+Whatever a ``DatasetSpec`` compiles into — warehouse replay through a
+``DPPWorkerPool`` + ``RebatchingClient``, a live ``StreamingSession``, with or
+without a ``DevicePrefetcher`` on top — the consumer sees ONE protocol:
+
+  * iterate (or ``get(timeout=...)``) device-/host-ready full batches,
+    ``None``/end meaning the feed is exhausted;
+  * ``drained`` / ``ended`` — the end-of-stream sentinel was observed (vs a
+    ``get`` timeout);
+  * ``stats()`` — one composite ``FeedStats`` snapshot (client counters,
+    merged worker counters, freshness, co-scan share savings);
+  * ``client_stats`` — the live mutable ``ClientStats`` (starvation
+    accounting shared with the trainer and elastic controller);
+  * ``record_train_step`` / ``recycle`` — trainer backchannel, delegated to
+    whichever stage owns it;
+  * ``stop()`` — release the device-prefetch stage (queued device batches);
+  * ``close()`` — full shutdown: stop prefetching, drain the host pipeline
+    untrained so parked workers can exit, join, and re-raise any pipeline
+    error;
+  * ``join()`` — wait for a fully-consumed pipeline and surface errors.
+
+``Trainer.fit`` consumes a ``Feed`` identically for batch and streaming.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional
+
+from repro.dpp.client import ClientStats
+
+
+@dataclasses.dataclass
+class FeedStats:
+    """Composite snapshot of one feed's counters (see DESIGN.md §6/§9)."""
+
+    client: ClientStats
+    workers: Optional[object] = None     # merged repro.dpp.worker.WorkerStats
+    freshness: Optional[object] = None   # streaming FreshnessStats (else None)
+    share: Optional[object] = None       # TenantShareStats (co-scan feeds)
+    peak_workers: int = 0
+    stale_dropped: int = 0               # streaming protocol drops
+
+
+class _StatsHandle:
+    """``feed.stats`` must serve two contracts at once: the legacy feeds
+    (``DevicePrefetcher``/``RebatchingClient``/``StreamingSession``) exposed a
+    live ``ClientStats`` ATTRIBUTE (``feed.stats.starvation_pct``), while the
+    Feed protocol specifies a ``stats()`` METHOD returning a composite
+    snapshot. This handle is both: calling it snapshots (``FeedStats``);
+    attribute access reads/writes through to the live ``ClientStats`` — so
+    call sites migrated off the deprecated ``make_*_feed`` shims keep working
+    either way."""
+
+    __slots__ = ("_feed",)
+
+    def __init__(self, feed: "Feed"):
+        object.__setattr__(self, "_feed", feed)
+
+    def __call__(self) -> "FeedStats":
+        return self._feed.snapshot()
+
+    def __getattr__(self, name):
+        return getattr(self._feed.client_stats, name)
+
+    def __setattr__(self, name, value):
+        setattr(self._feed.client_stats, name, value)
+
+
+class Feed:
+    """Uniform read-path handle (see module docstring).
+
+    ``inner`` is the stage the consumer pulls from (a ``DevicePrefetcher``,
+    ``StreamingSession``, or ``RebatchingClient``); the other stages are held
+    for stats, shutdown, and draining. Constructed by ``repro.data.open_feed``
+    (or the deprecated ``launch.steps.make_*_feed`` shims).
+    """
+
+    def __init__(
+        self,
+        inner: Any,
+        *,
+        client: Any = None,
+        pool: Any = None,
+        session: Any = None,
+        prefetcher: Any = None,
+        prep_fn=None,
+        spec=None,
+        share_stats=None,
+    ):
+        self._inner = inner
+        self.client = client if client is not None else getattr(
+            session, "client", None)
+        self.pool = pool if pool is not None else getattr(
+            session, "pool", None)
+        self.session = session
+        self.prefetcher = prefetcher
+        self.spec = spec
+        self.share_stats = share_stats
+        # prep applied consumer-side when there is no prefetch stage to run it
+        self._prep_fn = prep_fn if prefetcher is None else None
+        self._closed = False
+        self._join_error: list = []
+        self._joiner: Optional[threading.Thread] = None
+        if pool is not None and session is None:
+            # batch pipeline: a background joiner waits out the pool so the
+            # client receives its end-of-stream sentinel the moment the work
+            # list drains (the consumer must never have to call pool.join()
+            # itself — it would deadlock waiting for batches meanwhile)
+            def _join() -> None:
+                try:
+                    pool.join()
+                except BaseException as e:  # surfaced by join()/close()
+                    self._join_error.append(e)
+
+            self._joiner = threading.Thread(target=_join, daemon=True,
+                                            name="feed-joiner")
+            self._joiner.start()
+
+    # -- consumption -----------------------------------------------------------
+    def get(self, timeout: Optional[float] = None, record: bool = True):
+        """Next full batch, or ``None`` (end of stream OR timeout —
+        disambiguate via ``drained``). ``record=False`` suppresses the
+        starvation accounting (pulls that are not the trainer's critical
+        path), propagated to whichever stage owns the counters."""
+        g = getattr(self._inner, "get", None)
+        if g is not None:                       # DevicePrefetcher stage
+            return g(timeout=timeout, record=record)
+        out = self._inner.get_full_batch(timeout=timeout, record=record)
+        if out is not None and self._prep_fn is not None:
+            out = self._prep_fn(out)
+        return out
+
+    def get_full_batch(self, timeout: Optional[float] = None,
+                       record: bool = True):
+        """Client-protocol alias (legacy call sites)."""
+        return self.get(timeout=timeout, record=record)
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        while True:
+            b = self.get()
+            if b is None:
+                return
+            yield b
+
+    @property
+    def ended(self) -> bool:
+        return bool(getattr(self._inner, "ended", False))
+
+    @property
+    def drained(self) -> bool:
+        """True iff the end-of-stream sentinel was observed (the feed is
+        exhausted — a ``get`` returning ``None`` alone may just be a
+        timeout)."""
+        return self.ended
+
+    # -- trainer backchannel ---------------------------------------------------
+    def record_train_step(self, seconds: float) -> None:
+        rec = getattr(self._inner, "record_train_step", None)
+        if rec is not None:
+            rec(seconds)
+
+    def recycle(self, batch) -> None:
+        rec = getattr(self._inner, "recycle", None)
+        if rec is not None:
+            rec(batch)
+
+    # -- stats -----------------------------------------------------------------
+    @property
+    def client_stats(self) -> Optional[ClientStats]:
+        """The live mutable ClientStats (starvation/train-time accounting)."""
+        if self.client is not None:
+            return self.client.stats
+        return getattr(self._inner, "stats", None)
+
+    @property
+    def stats(self) -> _StatsHandle:
+        """Dual-contract handle: ``feed.stats()`` -> composite ``FeedStats``
+        snapshot (the Feed protocol); ``feed.stats.<counter>`` -> the live
+        ``ClientStats`` field (the legacy feed-object contract)."""
+        return _StatsHandle(self)
+
+    def snapshot(self) -> FeedStats:
+        """Point-in-time snapshot: every member is a COPY, so the repo's
+        before/after delta idiom works (the live mutable counters stay
+        reachable via ``client_stats``)."""
+
+        def copy(obj):
+            return dataclasses.replace(obj) if obj is not None else None
+
+        workers = None
+        if self.pool is not None:
+            workers = self.pool.merged_worker_stats()  # already a fresh merge
+        return FeedStats(
+            client=copy(self.client_stats) or ClientStats(),
+            workers=workers,
+            freshness=copy(getattr(self.session, "freshness", None)),
+            share=copy(self.share_stats),
+            peak_workers=getattr(self.pool, "peak_workers", 0),
+            stale_dropped=getattr(self.session, "stale_dropped", 0),
+        )
+
+    # -- lifecycle -------------------------------------------------------------
+    def stop(self) -> None:
+        """Release the device-prefetch stage (queued device buffers). The host
+        pipeline keeps running — use ``close()`` for full shutdown."""
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
+
+    def join(self) -> None:
+        """Wait for a fully-consumed pipeline to finish and re-raise any
+        worker/feeder error. Call only after consuming the whole feed — use
+        ``close()`` if the consumer walked away early."""
+        if self.session is not None:
+            self.session.join()
+        if self._joiner is not None:
+            self._joiner.join()
+        if self._join_error:
+            raise self._join_error[0]
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Full shutdown (idempotent): stop the prefetch stage, drain the host
+        pipeline untrained so workers parked on the bounded slot queue can
+        exit, then join and surface any pipeline error. ``timeout`` bounds the
+        drain; on expiry the daemon threads are abandoned."""
+        if self._closed:
+            return
+        self._closed = True
+        self.stop()
+        if self.session is not None:
+            self.session.close(timeout=timeout)
+            return
+        if self._joiner is not None and self.client is not None:
+            deadline = (None if timeout is None
+                        else time.perf_counter() + timeout)
+            while self._joiner.is_alive():
+                if deadline is not None and time.perf_counter() > deadline:
+                    # drain timed out: abandon the daemon threads, but still
+                    # surface any pipeline error already captured — a close()
+                    # that swallows a worker failure would report success on
+                    # silently truncated training data
+                    if self._join_error:
+                        raise self._join_error[0]
+                    return
+                b = self.client.get_full_batch(timeout=0.05, record=False)
+                if b is not None:
+                    self.client.recycle(b)
+        self.join()
+
+    def __enter__(self) -> "Feed":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

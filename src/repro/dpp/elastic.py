@@ -103,6 +103,14 @@ class DPPWorkerPool:
         self.items_done = 0
         self.peak_workers = n_workers
 
+    @classmethod
+    def from_plan(cls, plan, client, **kwargs) -> "DPPWorkerPool":
+        """Pool over a spec-compiled ``repro.dpp.worker.WorkerPlan`` instead
+        of a hand-wired worker factory (the declarative read path's entry)."""
+        from repro.dpp.worker import DPPWorker
+
+        return cls(lambda: DPPWorker.from_plan(plan), client, **kwargs)
+
     # -- worker loop -------------------------------------------------------------
     def _worker_loop(self, worker) -> None:
         t0 = time.perf_counter()

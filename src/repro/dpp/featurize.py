@@ -28,12 +28,21 @@ from repro.core.versioning import TrainingExample
 _EMPTY_I64 = np.zeros(0, np.int64)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FeatureSpec:
+    """Frozen + hashable (sequence fields normalized to tuples) so it can
+    live inside a frozen ``repro.data.DatasetSpec``."""
+
     seq_len: int                       # padded UIH length
     uih_traits: Sequence[str]          # traits to lift into [B, L] arrays
     candidate_fields: Sequence[str] = ("item_id",)
     label_fields: Sequence[str] = ("click",)
+
+    def __post_init__(self):
+        object.__setattr__(self, "uih_traits", tuple(self.uih_traits))
+        object.__setattr__(self, "candidate_fields",
+                           tuple(self.candidate_fields))
+        object.__setattr__(self, "label_fields", tuple(self.label_fields))
 
 
 # ---------------------------------------------------------------------------

@@ -178,8 +178,12 @@ class DevicePrefetcher:
             self._thread.start()
         return self
 
-    def get(self, timeout: Optional[float] = None):
-        """Next device-resident batch, or ``None`` at end of stream."""
+    def get(self, timeout: Optional[float] = None, record: bool = True):
+        """Next device-resident batch, or ``None`` at end of stream.
+
+        ``record=False`` suppresses the starvation/full-batch accounting —
+        for pulls that are NOT the trainer's critical path (e.g. a stacked
+        stage draining this one)."""
         self.start()
         before = self._clock.snapshot()
         t0 = time.perf_counter()
@@ -193,7 +197,7 @@ class DevicePrefetcher:
         if isinstance(out, _SourceError):
             self.stop()
             raise RuntimeError("device prefetch source failed") from out.exc
-        if out is not None:
+        if out is not None and record:
             # split the consumer's wait by what the prefetcher was doing
             after = self._clock.snapshot()
             d_host = after.get("host", 0.0) - before.get("host", 0.0)

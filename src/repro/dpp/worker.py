@@ -30,6 +30,22 @@ from repro.dpp.featurize import (
 ProbeFn = Callable[[int], Optional[List[TrainingExample]]]  # batch idx -> examples
 
 
+@dataclasses.dataclass
+class WorkerPlan:
+    """Spec-compiled read plan for one worker: everything a ``DPPWorker``
+    needs, bundled by the declarative compiler (``repro.data.open_feed``) so
+    pipelines stop hand-wiring (materializer, projection, feature spec,
+    schema) at every call site. ``make_materializer`` is a factory because
+    materializers are thread-local by design (window cache + IO accounting):
+    each pool worker gets its own."""
+
+    projection: TenantProjection
+    feature_spec: FeatureSpec
+    schema: ev.TraitSchema
+    make_materializer: Callable[[], Materializer]
+    probe_latency_s: float = 0.0
+
+
 class _ProbeError:
     """Exception captured in the probe producer thread, re-raised consumer-side."""
 
@@ -77,6 +93,14 @@ class DPPWorker:
         self.schema = schema
         self.probe_latency_s = probe_latency_s
         self.stats = WorkerStats()
+
+    @classmethod
+    def from_plan(cls, plan: WorkerPlan) -> "DPPWorker":
+        """Build a worker from a spec-compiled ``WorkerPlan`` (fresh
+        materializer per call: thread-local by design)."""
+        return cls(plan.make_materializer(), plan.projection,
+                   plan.feature_spec, plan.schema,
+                   probe_latency_s=plan.probe_latency_s)
 
     # -- single base batch -----------------------------------------------------
     def _lookup(self, examples: List[TrainingExample]) -> List[ev.EventBatch]:

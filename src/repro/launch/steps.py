@@ -479,43 +479,69 @@ def _retrieval_flops(arch_id: str, cfg, n: int) -> float:
 
 # ---------------------------------------------------------------------------
 # Device feed: host data plane -> sharded device batches
+#
+# DEPRECATED SHIMS. The declarative read path (repro.data) replaced both of
+# these: describe the feed as a DatasetSpec and call
+# ``repro.data.open_feed(spec, sim, cell=cell, mesh=mesh, prep_fn=...)``.
+# The shims keep old call sites working — same arguments, same behavior —
+# but now return the uniform ``repro.data.Feed`` protocol (which iterates,
+# ``get``s, and records train steps exactly like the DevicePrefetcher they
+# used to return) and emit a DeprecationWarning.
 # ---------------------------------------------------------------------------
 
 def make_device_feed(cell: Cell, source, mesh=None, depth: int = 2,
                      prep_fn=None, stats=None, recycle_host: bool = False):
-    """Double-buffered device feed for a cell's input batches.
+    """DEPRECATED: use ``repro.data.open_feed`` (this is a thin shim).
 
-    Wraps a host-batch source (a ``RebatchingClient``, or any iterable of
-    host batch dicts) in a ``repro.dpp.prefetch.DevicePrefetcher`` whose
-    ``device_put`` honors the cell's batch shardings: batch N+1 lands on the
-    mesh — laid out exactly as the jit'd step expects, so no resharding on
-    dispatch — while step N computes. ``prep_fn`` runs model-specific host
-    transforms inside the prefetch thread (off the trainer's critical path).
+    Double-buffered device feed for a cell's input batches: wraps a
+    host-batch source (a ``RebatchingClient``, or any iterable of host batch
+    dicts) in a ``DevicePrefetcher`` whose ``device_put`` honors the cell's
+    batch shardings, returned behind the uniform ``Feed`` protocol.
     """
-    from jax.sharding import NamedSharding
-    from repro.dpp.prefetch import DevicePrefetcher
+    import warnings
 
-    sharding = None
-    if mesh is not None:
-        batch_spec = cell.in_shardings[-1]
-        sharding = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
-            batch_spec, is_leaf=lambda x: isinstance(x, P))
-    return DevicePrefetcher(source, depth=depth, sharding=sharding,
-                            prep_fn=prep_fn, stats=stats,
-                            recycle_host=recycle_host)
+    warnings.warn(
+        "launch.steps.make_device_feed is deprecated; build a "
+        "repro.data.DatasetSpec and call repro.data.open_feed(...) instead",
+        DeprecationWarning, stacklevel=2)
+    return _shim_feed(cell, source, mesh, depth, prep_fn, stats, recycle_host)
 
 
 def make_streaming_feed(cell: Cell, session, mesh=None, depth: int = 2,
                         prep_fn=None, recycle_host: bool = False):
-    """Streaming feed mode: wrap a ``repro.streaming.StreamingSession`` in the
-    cell-sharded device prefetcher. The session speaks the rebatching client's
-    feed protocol, so the prefetcher overlaps H2D with the step exactly as in
-    batch mode, while the session settles event→gradient freshness samples at
-    every full-batch delivery and releases generation leases as micro-batches
-    drain. ``session.start()`` is implicit on first pull."""
-    return make_device_feed(cell, session, mesh=mesh, depth=depth,
-                            prep_fn=prep_fn, recycle_host=recycle_host)
+    """DEPRECATED: use ``repro.data.open_feed`` with a ``StreamSource`` spec
+    (this is a thin shim).
+
+    Wraps a ``repro.streaming.StreamingSession`` in the cell-sharded device
+    prefetcher behind the uniform ``Feed`` protocol: H2D overlaps the step
+    exactly as in batch mode while the session settles event→gradient
+    freshness and releases generation leases. ``session.start()`` is implicit
+    on first pull."""
+    import warnings
+
+    warnings.warn(
+        "launch.steps.make_streaming_feed is deprecated; build a "
+        "repro.data.DatasetSpec(source=StreamSource(...)) and call "
+        "repro.data.open_feed(...) instead",
+        DeprecationWarning, stacklevel=2)
+    return _shim_feed(cell, session, mesh, depth, prep_fn, None, recycle_host)
+
+
+def _shim_feed(cell, source, mesh, depth, prep_fn, stats, recycle_host):
+    from repro.data.compile import cell_input_sharding
+    from repro.data.feed import Feed
+    from repro.dpp.prefetch import DevicePrefetcher
+    from repro.streaming.session import StreamingSession
+
+    sharding = cell_input_sharding(cell, mesh)
+    pf = DevicePrefetcher(source, depth=depth, sharding=sharding,
+                          prep_fn=prep_fn, stats=stats,
+                          recycle_host=recycle_host)
+    session = source if isinstance(source, StreamingSession) else None
+    client = source if (session is None and hasattr(source, "recycle")
+                       and hasattr(source, "get_full_batch")) else None
+    return Feed(pf, client=client, session=session, prefetcher=pf,
+                prep_fn=prep_fn)
 
 
 def build_cell(spec: ArchSpec, shape_name: str, mesh, use_full=True,

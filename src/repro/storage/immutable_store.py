@@ -76,6 +76,24 @@ class ScanRequest:
     traits: Optional[Tuple[str, ...]] = None  # trait projection (None = group's all)
     generation: int = -1     # -1 = live; >= 0 = pinned (leased) generation
 
+    def __post_init__(self):
+        """Validate at the API boundary, not deep inside ``_scan_into``.
+
+        One legitimate inverted-bounds form exists: a negative ``end_ts`` is
+        the snapshotter's "nothing consolidated yet" watermark (an example
+        logged before the first compaction scans an empty window), so
+        ``start_ts > end_ts`` is only rejected when ``end_ts >= 0``."""
+        if self.max_events < -1:
+            raise ValueError(
+                f"max_events must be >= -1 (-1 = unbounded), got {self.max_events}")
+        if self.generation < -1:
+            raise ValueError(
+                f"generation must be >= -1 (-1 = live), got {self.generation}")
+        if self.end_ts >= 0 and self.start_ts > self.end_ts:
+            raise ValueError(
+                f"inverted scan bounds: start_ts={self.start_ts} > "
+                f"end_ts={self.end_ts}")
+
 
 class GenerationUnavailable(KeyError):
     """The requested generation is neither live nor retained by a lease."""
@@ -135,6 +153,8 @@ class IOStats:
     decode_cache_hits: int = 0  # stripe decodes served from the decode LRU
     parallel_shards: int = 0    # cumulative shard fanout of batched executions
     pinned_scans: int = 0       # scans served from a retained (leased) generation
+    subsumed_hits: int = 0      # requests carved from a wider in-plan request
+    #                             (union-projection planning, §2.3/§4.2.2)
 
     def snapshot(self) -> "IOStats":
         return dataclasses.replace(self)
@@ -150,15 +170,29 @@ class IOStats:
 
 @dataclasses.dataclass
 class ScanPlan:
-    """Deduped, shard-grouped execution plan for a batch of scan requests."""
+    """Deduped, shard-grouped execution plan for a batch of scan requests.
+
+    **Union-projection planning** (§2.3, §4.2.2): beyond exact-duplicate
+    dedupe, a request whose (user, group, bounds, generation) matches a wider
+    in-plan request with a superset of traits and an equal-or-larger
+    ``max_events`` budget never hits storage — it is *derived* by carving the
+    wider result (tail-slice to the narrower sequence budget + trait
+    projection). ``shard_groups`` only dispatches the covering requests;
+    ``derived`` maps each subsumed unique index to its covering unique index.
+    """
 
     unique: List[ScanRequest]          # deduped requests, first-seen order
     assignment: List[int]              # original request idx -> unique idx
     shard_groups: Dict[int, List[int]]  # shard -> indices into ``unique``
+    derived: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def dedup_hits(self) -> int:
         return len(self.assignment) - len(self.unique)
+
+    @property
+    def subsumed(self) -> int:
+        return len(self.derived)
 
     @property
     def fanout(self) -> int:
@@ -330,27 +364,16 @@ class ImmutableUIHStore:
             stats.bytes_decoded += columnar.decoded_bytes_for(s.blob, traits)
         return batch
 
-    def _scan_into(self, req: ScanRequest, stats: IOStats) -> ev.EventBatch:
-        """Execute one range scan, accounting I/O into ``stats`` (the batched
-        executor passes per-shard accumulators so shard threads don't race)."""
-        stats.requests += 1
-        traits = req.traits or self.schema.group_traits(req.group)
-        if req.generation >= 0 and req.generation != self.generation:
-            stats.pinned_scans += 1
-        shard, entry = self._locate(req.user_id, req.group, req.generation)
-        if entry is None:
-            return ev.empty_batch(self.schema, traits)
+    def _select_stripes(self, req: ScanRequest, entry) -> List[Stripe]:
+        """The stripe run a request reads: overlap [start_ts, end_ts], walked
+        backwards from the most recent stripe until the sequence-length budget
+        is met (shared by the scan itself and ``estimate_scan``)."""
         starts, stripes = entry
-        stats.seeks += 1  # single-level layout: one seek per (user,group) run
-
-        # stripe run overlapping [start_ts, end_ts]
         lo = bisect.bisect_right(starts, req.start_ts) - 1
         lo = max(lo, 0)
         hi = bisect.bisect_right(starts, req.end_ts)  # stripes[lo:hi] may overlap
         if lo >= hi:
-            return ev.empty_batch(self.schema, traits)
-
-        # sequence-length projection: walk backwards from the most recent stripe
+            return []
         chosen: List[Stripe] = []
         have = 0
         for i in range(hi - 1, lo - 1, -1):
@@ -365,6 +388,35 @@ class ImmutableUIHStore:
                 # an extra stripe guards against end_ts trimming removing events
                 break
         chosen.reverse()
+        return chosen
+
+    def estimate_scan(self, req: ScanRequest) -> Tuple[int, int]:
+        """Metadata-only cost of one scan: ``(stripes, blob_bytes)`` the
+        request would read right now. Walks the same stripe-selection logic as
+        the scan itself — the estimate matches ``IOStats.stripes_read`` /
+        ``bytes_scanned`` exactly — but touches no blobs: no decode, no
+        latency charge, no stats. Raises ``GenerationUnavailable`` like a real
+        scan would (callers doing best-effort accounting should catch it)."""
+        _, entry = self._locate(req.user_id, req.group, req.generation)
+        if entry is None:
+            return 0, 0
+        chosen = self._select_stripes(req, entry)
+        return len(chosen), sum(len(s.blob) for s in chosen)
+
+    def _scan_into(self, req: ScanRequest, stats: IOStats) -> ev.EventBatch:
+        """Execute one range scan, accounting I/O into ``stats`` (the batched
+        executor passes per-shard accumulators so shard threads don't race)."""
+        stats.requests += 1
+        traits = req.traits or self.schema.group_traits(req.group)
+        if req.generation >= 0 and req.generation != self.generation:
+            stats.pinned_scans += 1
+        shard, entry = self._locate(req.user_id, req.group, req.generation)
+        if entry is None:
+            return ev.empty_batch(self.schema, traits)
+        stats.seeks += 1  # single-level layout: one seek per (user,group) run
+        chosen = self._select_stripes(req, entry)
+        if not chosen:
+            return ev.empty_batch(self.schema, traits)
 
         parts: List[ev.EventBatch] = []
         for s in chosen:
@@ -375,32 +427,80 @@ class ImmutableUIHStore:
         if not out:
             return ev.empty_batch(self.schema, traits)
         out = ev.time_slice(out, req.start_ts, req.end_ts)
-        if req.max_events >= 0 and ev.batch_len(out) > req.max_events:
-            # keep the most recent max_events (tenant sequence-length budget)
-            n = ev.batch_len(out)
-            out = ev.slice_batch(out, n - req.max_events, n)
-        return out
+        # keep the most recent max_events (tenant sequence-length budget)
+        return ev.tail_view(out, req.max_events)
 
     def scan(self, req: ScanRequest) -> ev.EventBatch:
         """Bounded range scan with 3-dimensional projection pushdown."""
         return self._scan_into(req, self.stats)
 
     # -- planned batch execution ----------------------------------------------
+    def _effective_traits(self, req: ScanRequest) -> Tuple[str, ...]:
+        return req.traits or self.schema.group_traits(req.group)
+
     def plan(self, reqs: Sequence[ScanRequest]) -> ScanPlan:
-        """Dedupe identical requests and group the survivors by shard."""
+        """Dedupe identical requests, subsume projection-contained ones, and
+        group the surviving root requests by shard.
+
+        Subsumption (union-projection planning): among requests sharing
+        (user, group, bounds, generation), one whose traits are a subset and
+        whose ``max_events`` budget is no larger than another's is marked
+        *derived* — the executor serves it by carving the wider result instead
+        of scanning (``IOStats.subsumed_hits``). This is what lets N tenant
+        projections over the same window cost ONE storage scan."""
         index: Dict[ScanRequest, int] = {}
         unique: List[ScanRequest] = []
         assignment: List[int] = []
-        shard_groups: Dict[int, List[int]] = {}
+        by_window: Dict[tuple, List[int]] = {}
         for r in reqs:
             j = index.get(r)
             if j is None:
                 j = index[r] = len(unique)
                 unique.append(r)
-                shard_groups.setdefault(self.router.route(r.user_id), []).append(j)
+                by_window.setdefault(
+                    (r.user_id, r.group, r.start_ts, r.end_ts, r.generation),
+                    []).append(j)
             assignment.append(j)
+
+        derived: Dict[int, int] = {}
+        inf = float("inf")
+        for js in by_window.values():
+            if len(js) < 2:
+                continue
+            info = {
+                j: (unique[j].max_events if unique[j].max_events >= 0 else inf,
+                    frozenset(self._effective_traits(unique[j])))
+                for j in js
+            }
+            # widest first: a later (narrower) request can only be covered by
+            # an already-accepted root
+            roots: List[int] = []
+            for j in sorted(js, key=lambda j: (info[j][0], len(info[j][1])),
+                            reverse=True):
+                me_j, tr_j = info[j]
+                cover = next(
+                    (k for k in roots
+                     if info[k][0] >= me_j and info[k][1] >= tr_j), None)
+                if cover is None:
+                    roots.append(j)
+                else:
+                    derived[j] = cover
+
+        shard_groups: Dict[int, List[int]] = {}
+        for j, r in enumerate(unique):
+            if j in derived:
+                continue
+            shard_groups.setdefault(self.router.route(r.user_id), []).append(j)
         return ScanPlan(unique=unique, assignment=assignment,
-                        shard_groups=shard_groups)
+                        shard_groups=shard_groups, derived=derived)
+
+    def _carve(self, req: ScanRequest, wide: ev.EventBatch) -> ev.EventBatch:
+        """Serve a subsumed request from its covering request's result:
+        tail-slice to the narrower sequence budget, project to the narrower
+        traits — byte-identical to executing the narrow scan directly (same
+        bounds => the wide result's most-recent tail IS the narrow event
+        set; trait decode is column-independent)."""
+        return ev.tail_view(wide, req.max_events, self._effective_traits(req))
 
     def close(self) -> None:
         """Shut down the shard-scan thread pool (idempotent). Long-lived
@@ -446,8 +546,13 @@ class ImmutableUIHStore:
             shard_stats = [run_shard(g) for g in groups]
         else:
             shard_stats = list(self._pool.map(run_shard, groups))
+        # subsumed requests: carve the narrower view out of the covering
+        # result — no storage I/O, no decode (union-projection planning)
+        for j, k in plan.derived.items():
+            results[j] = self._carve(plan.unique[j], results[k])
         call = IOStats(batched_requests=1, dedup_hits=plan.dedup_hits,
-                       parallel_shards=plan.fanout)
+                       parallel_shards=plan.fanout,
+                       subsumed_hits=plan.subsumed)
         for local in shard_stats:
             call.merge(local)
         with self._stats_lock:

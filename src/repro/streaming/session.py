@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.materialize import ChecksumMismatch
 from repro.dpp.client import RebatchingClient
 from repro.dpp.elastic import DPPWorkerPool, ElasticController
+from repro.dpp.worker import DPPWorker, WorkerPlan
 from repro.storage.stream import TrainingExampleStream, Warehouse
 from repro.streaming.backfill import BackfillCoordinator
 from repro.streaming.source import MicroBatchConfig, StreamingSource
@@ -127,7 +128,7 @@ class StreamingSession:
     def __init__(
         self,
         stream: TrainingExampleStream,
-        make_worker: Callable[[], object],
+        make_worker,
         *,
         full_batch_size: int,
         micro_batch: Optional[MicroBatchConfig] = None,
@@ -152,6 +153,11 @@ class StreamingSession:
         self._pq_lock = threading.Lock()
         self._delivered: Deque[int] = collections.deque()  # rows per pulled batch
         self._n_workers = n_workers
+        if isinstance(make_worker, WorkerPlan):
+            # a spec-compiled plan (declarative read path): build the
+            # per-thread worker factory from it
+            plan = make_worker
+            make_worker = lambda: DPPWorker.from_plan(plan)  # noqa: E731
         self.pool = DPPWorkerPool(
             lambda: _AckingWorker(make_worker(), self),
             self.client, n_workers=n_workers, controller=controller,
@@ -243,6 +249,17 @@ class StreamingSession:
     @property
     def ended(self) -> bool:
         return self.client.ended
+
+    @property
+    def drained(self) -> bool:
+        """Feed-protocol drain signal: the end-of-stream sentinel reached the
+        consumer (stream closed, every batch delivered)."""
+        return self.client.ended
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Feed-protocol shutdown: drain the remaining stream untrained and
+        join (see ``stop``)."""
+        self.stop(timeout=timeout)
 
     def get_full_batch(self, timeout: Optional[float] = None,
                        record: bool = True):

@@ -125,10 +125,12 @@ class Trainer:
     # -- full loop ---------------------------------------------------------------
     def fit(self, batches: Iterable[Dict[str, np.ndarray]],
             max_steps: Optional[int] = None) -> None:
+        from repro.data.feed import Feed
         from repro.dpp.prefetch import DevicePrefetcher
 
         feed = batches
-        if self.cfg.prefetch_depth > 0 and not isinstance(feed, DevicePrefetcher):
+        if (self.cfg.prefetch_depth > 0
+                and not isinstance(feed, (DevicePrefetcher, Feed))):
             feed = DevicePrefetcher(feed, depth=self.cfg.prefetch_depth)
         # GPU-busy accounting feeds the elastic controller's starvation signal
         record = getattr(feed, "record_train_step", None)
@@ -145,7 +147,14 @@ class Trainer:
             if wall is None or get is None:
                 yield from feed
                 return
-            stats = getattr(feed, "stats", None)
+            # the live mutable ClientStats: a Feed exposes it as
+            # ``client_stats`` (its ``stats`` is the composite snapshot
+            # method); legacy feeds expose the object directly as ``stats``
+            stats = getattr(feed, "client_stats", None)
+            if stats is None:
+                stats = getattr(feed, "stats", None)
+                if callable(stats):
+                    stats = None
             pending_wait = 0.0   # timed-out poll waits, unrecorded by the feed
             while True:
                 remaining = wall - (time.perf_counter() - t0)
@@ -189,6 +198,8 @@ class Trainer:
                     break
         finally:
             # break AND exception paths: release the transfer thread and any
-            # queued device batches (idempotent; harmless on exhaustion)
-            if isinstance(feed, DevicePrefetcher):
+            # queued device batches (idempotent; harmless on exhaustion).
+            # A Feed's stop() releases ONLY its device-prefetch stage — the
+            # host pipeline stays up for the caller to close()/drain.
+            if isinstance(feed, (DevicePrefetcher, Feed)):
                 feed.stop()
