@@ -98,11 +98,12 @@ class TenantShareStats:
     estimate_scan`` walks the same stripe selection the scan executes, so
     they match ``IOStats.bytes_scanned`` for a stable generation) — computed
     per co-scanned window against what each tenant's solo scan would have
-    read. Caveat: with ``generations="live"`` the estimate runs after the
-    fetch, so a compaction flip racing the two makes that window's figures
-    reflect the new generation's stripes — best-effort under churn (pinned
-    windows estimate against their retained generation and stay exact; a
-    GC'd generation skips accounting rather than guessing)."""
+    read. Accounting is pinned to the generation actually scanned: live
+    (gen=-1) fetches record the generation id that was live during the scan
+    and estimate against it, so a compaction flip racing fetch and estimate
+    cannot attribute the new generation's stripes to this window — if the
+    scanned generation has since been dropped (no retaining lease), that
+    window skips accounting rather than guessing."""
 
     co_scans: int = 0                # materialize_multi calls that hit the store
     co_scan_windows: int = 0         # unique windows fetched ONCE for N tenants
@@ -201,7 +202,7 @@ class Materializer:
                 continue
             members.setdefault(self._window_key(ex, projection), []).append(i)
 
-        windows, _ = self._resolve_windows(members, examples, projection)
+        windows, _, _ = self._resolve_windows(members, examples, projection)
 
         # reassemble per-example UIHs from the shared windows
         for key, idxs in members.items():
@@ -258,9 +259,17 @@ class Materializer:
                 continue
             members.setdefault(self._window_key(ex, union), []).append(i)
 
-        windows, fetched = self._resolve_windows(members, examples, union)
-        if share_stats is not None and fetched:
-            self._account_share(fetched, projections, union, share_stats)
+        # hold the scan-time lease through the share estimates so the
+        # generation the accounting is pinned to cannot be GC'd (and thus
+        # skipped) by a compaction flip racing the estimate
+        windows, fetched, lease = self._resolve_windows(
+            members, examples, union, hold_lease=share_stats is not None)
+        try:
+            if share_stats is not None and fetched:
+                self._account_share(fetched, projections, union, share_stats)
+        finally:
+            if lease is not None:
+                lease.release()
 
         for key, idxs in members.items():
             imm = windows[key]
@@ -288,6 +297,7 @@ class Materializer:
         members: "OrderedDict[tuple, List[int]]",
         examples: Sequence[TrainingExample],
         projection: Optional[TenantProjection],
+        hold_lease: bool = False,
     ):
         """Resolve every unique window key: cross-batch LRU first, then ONE
         planned store round-trip for the misses (with pin-race retry: a pinned
@@ -297,9 +307,15 @@ class Materializer:
         The per-window decision is resolved once (counting each pin miss
         exactly once) and only demoted on retries, never re-derived.
 
-        Returns ``(windows, fetched)`` where ``fetched`` lists the
+        Returns ``(windows, fetched, lease)`` where ``fetched`` lists the
         ``(key, representative_example, generation)`` triples that actually
-        hit the store (cache hits excluded)."""
+        hit the store (cache hits excluded). With ``hold_lease`` (share
+        accounting), live (gen=-1) fetches record the generation id a
+        transient lease named at scan start and ``lease`` is that lease,
+        still held (the caller releases it after estimating against the
+        recorded generation). Without it — the trainer's hot path, where the
+        triples' generation is never consumed — no lease is taken and
+        ``lease`` is ``None``."""
         windows: dict = {}
         to_fetch: List[Tuple[tuple, TrainingExample, int]] = []  # key, rep, n_members
         for key, idxs in members.items():
@@ -328,13 +344,29 @@ class Materializer:
             return reqs, spans
 
         fetched: List[Tuple[tuple, TrainingExample, int]] = []
+        lease = None
         if to_fetch:
             while True:
                 reqs, fetch_spans = collect()
+                # share accounting (hold_lease) takes a transient lease that
+                # names — and retains — the generation live when the scan
+                # STARTS: reading store.generation after the scan would name
+                # whatever a racing compaction published in between,
+                # mis-attributing the new generation's stripes to this
+                # window's share accounting. (gen=-1 requests still resolve
+                # per-request, so a mid-scan flip can straddle; audit mode's
+                # checksum check catches actual content drift.) Plain fetches
+                # never consume the recorded generation, so they skip the
+                # lease and its _gen_lock round-trips on the hot path.
+                if hold_lease:
+                    lease = self.immutable.acquire_lease()
                 try:
                     parts = self.immutable.multi_range_scan(reqs, self.io_stats)
                     break
                 except GenerationUnavailable:
+                    if lease is not None:
+                        lease.release()
+                        lease = None
                     demoted = False
                     for key in gens:
                         if (gens[key] >= 0
@@ -348,14 +380,25 @@ class Materializer:
                         # guarantee termination; live scans never raise
                         for key in gens:
                             gens[key] = -1
-            for key, rep, lo, hi, gen in fetch_spans:
-                imm = self._join_groups(parts[lo:hi])
-                self._maybe_check(rep, imm, projection, gen)
-                self.stats.windows_fetched += 1
-                windows[key] = imm
-                self._window_cache_put(key, imm)
-                fetched.append((key, rep, gen))
-        return windows, fetched
+                except BaseException:
+                    if lease is not None:
+                        lease.release()
+                    raise
+            try:
+                live_gen = (lease.generation if lease is not None
+                            else self.immutable.generation)
+                for key, rep, lo, hi, gen in fetch_spans:
+                    imm = self._join_groups(parts[lo:hi])
+                    self._maybe_check(rep, imm, projection, gen)
+                    self.stats.windows_fetched += 1
+                    windows[key] = imm
+                    self._window_cache_put(key, imm)
+                    fetched.append((key, rep, gen if gen >= 0 else live_gen))
+            except BaseException:
+                if lease is not None:
+                    lease.release()
+                raise
+        return windows, fetched, lease
 
     def _account_share(
         self,

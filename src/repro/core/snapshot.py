@@ -90,7 +90,14 @@ class BaseSnapshotter:
                 assert ev.batch_len(p) == n, "feature groups straddled a flip"
             immutable_part.update(p)
         # mutable tier: strictly newer than the immutable watermark, <= T_request
-        mutable_part = self.mutable.read(user_id, end_ts, request_ts)
+        # — but never older than the lookback start. When the watermark trails
+        # start_ts (a user returning after idling past the lookback window),
+        # the immutable scan is empty and an unclamped (watermark, request_ts]
+        # read would feed the model mutable events OLDER than the lookback
+        # bound no active user's UIH can ever contain (read is exclusive-lo,
+        # so start_ts - 1 keeps start_ts itself in-window).
+        mutable_part = self.mutable.read(
+            user_id, max(end_ts, start_ts - 1), request_ts)
         return immutable_part, mutable_part, start_ts, end_ts, gen
 
     def inference_uih(self, user_id: int, request_ts: int) -> ev.EventBatch:

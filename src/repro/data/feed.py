@@ -224,13 +224,37 @@ class Feed:
         """Full shutdown (idempotent): stop the prefetch stage, drain the host
         pipeline untrained so workers parked on the bounded slot queue can
         exit, then join and surface any pipeline error. ``timeout`` bounds the
-        drain; on expiry the daemon threads are abandoned."""
+        drain; on expiry the daemon threads are abandoned. A shim feed over a
+        bare client (caller-owned pool) drains in the background instead —
+        close() returns immediately and the caller's own ``pool.join()``
+        both finishes the drain and terminates it."""
         if self._closed:
             return
         self._closed = True
         self.stop()
         if self.session is not None:
             self.session.close(timeout=timeout)
+            return
+        if self.client is not None and self._joiner is None:
+            # Shim-constructed feed around a BARE client (the deprecated
+            # make_*_feed path): the pool — and thus the pool.join() that
+            # sends the client's end-of-stream sentinel — belongs to the
+            # CALLER and runs only after this close() returns. Drain in the
+            # background so workers parked on the bounded slot queues are
+            # released while the caller joins its own pool; the sentinel that
+            # join sends is what stops the drainer. Daemon: if the caller
+            # never joins, it idles until process exit.
+            client = self.client
+
+            def _drain() -> None:
+                while not getattr(client, "ended", True):
+                    b = client.get_full_batch(timeout=0.05, record=False)
+                    if b is not None:
+                        client.recycle(b)
+
+            threading.Thread(target=_drain, daemon=True,
+                             name="feed-shim-drainer").start()
+            self.join()
             return
         if self._joiner is not None and self.client is not None:
             deadline = (None if timeout is None

@@ -79,20 +79,18 @@ class ScanRequest:
     def __post_init__(self):
         """Validate at the API boundary, not deep inside ``_scan_into``.
 
-        One legitimate inverted-bounds form exists: a negative ``end_ts`` is
-        the snapshotter's "nothing consolidated yet" watermark (an example
-        logged before the first compaction scans an empty window), so
-        ``start_ts > end_ts`` is only rejected when ``end_ts >= 0``."""
+        ``start_ts > end_ts`` is NOT rejected: inverted bounds are a
+        legitimate empty-window request the snapshotter produces routinely —
+        a negative ``end_ts`` is the "nothing consolidated yet" watermark
+        (examples logged before the first compaction), and a user returning
+        after idling longer than the lookback window yields
+        ``end_ts = min(watermark, request_ts) < start_ts``. Both scan empty."""
         if self.max_events < -1:
             raise ValueError(
                 f"max_events must be >= -1 (-1 = unbounded), got {self.max_events}")
         if self.generation < -1:
             raise ValueError(
                 f"generation must be >= -1 (-1 = live), got {self.generation}")
-        if self.end_ts >= 0 and self.start_ts > self.end_ts:
-            raise ValueError(
-                f"inverted scan bounds: start_ts={self.start_ts} > "
-                f"end_ts={self.end_ts}")
 
 
 class GenerationUnavailable(KeyError):

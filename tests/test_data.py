@@ -114,8 +114,6 @@ def test_projection_hashable_and_union():
 # ---------------------------------------------------------------------------
 
 def test_scan_request_validates_on_construction():
-    with pytest.raises(ValueError, match="inverted scan bounds"):
-        ScanRequest(0, "core", start_ts=10, end_ts=5)
     with pytest.raises(ValueError, match="max_events"):
         ScanRequest(0, "core", 0, 10, max_events=-2)
     with pytest.raises(ValueError, match="generation"):
@@ -124,6 +122,47 @@ def test_scan_request_validates_on_construction():
     # watermark yet" (examples logged before the first compaction)
     ScanRequest(0, "core", start_ts=5, end_ts=-1)
     ScanRequest(0, "core", 0, 10, max_events=-1, generation=-1)
+
+
+def test_inverted_bounds_scan_empty_not_raise():
+    # start_ts > end_ts is a legitimate empty-window request, NOT an error:
+    # the snapshotter emits it whenever a user's immutable watermark is older
+    # than request_ts - lookback (a user returning after a long idle).
+    sim = _sim(days=2, pin=False)
+    store = sim.immutable
+    uid = sim.examples[-1].user_id
+    wm = store.watermark(uid)
+    assert wm >= 0
+    got = store.scan(ScanRequest(uid, "core", start_ts=wm + 1_000, end_ts=wm))
+    assert ev.batch_len(got) == 0
+
+
+def test_snapshotter_survives_watermark_older_than_lookback():
+    # Regression: with a 1-day lookback, day-2 requests put start_ts
+    # (request_ts - lookback) past the day-1 consolidation watermark, so
+    # _fetch_both_tiers builds ScanRequests with start_ts > end_ts >= 0.
+    # This used to raise ValueError("inverted scan bounds") from
+    # ScanRequest.__post_init__; it must yield an empty immutable window.
+    cfg = SimConfig(
+        stream=ev.StreamConfig(n_users=4, n_items=500, days=4,
+                               events_per_user_day_mean=10.0, seed=1),
+        stripe_len=16,
+        requests_per_user_day=2,
+        lookback_ms=1 * ev.MS_PER_DAY,
+        seed=1,
+        pin_generations=False,
+    )
+    sim = ProductionSim(cfg)
+    sim.run_days(2, capture_reference=False)
+    assert sim.examples
+    # and the lookback contract holds: the mutable read is clamped to the
+    # window start, so the returning-idle user's UIH never contains events
+    # older than request_ts - lookback (which an unclamped (watermark,
+    # request_ts] read would feed it)
+    for exm in sim.examples:
+        mut = exm.mutable_uih
+        if mut and ev.batch_len(mut):
+            assert int(mut["timestamp"].min()) >= exm.request_ts - cfg.lookback_ms
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +449,37 @@ def test_make_device_feed_shim_warns_and_returns_feed_protocol():
     assert feed.stats.starvation_pct >= 0.0
     feed.stats.starved_time_s += 0.0        # legacy in-place mutation works
     feed.close()
+
+
+def test_shim_feed_close_drains_caller_owned_pool():
+    # Regression: a shim Feed wraps a BARE client (pool owned by the caller,
+    # as at legacy call sites mid-migration). close() must still drain the
+    # host pipeline so workers parked on the bounded slot queues exit —
+    # otherwise the caller's own pool.join() hangs.
+    from repro.data.compile import _batch_items, compile_worker_plan
+    from repro.dpp.client import RebatchingClient
+    from repro.dpp.elastic import DPPWorkerPool
+    from repro.launch.steps import make_device_feed
+
+    sim = _sim(users=6, days=2, pin=False)
+    spec = _tiny_spec(WarehouseSource(), buffer_batches=1)
+    client = RebatchingClient(spec.batch_size, buffer_batches=1)
+    pool = DPPWorkerPool.from_plan(compile_worker_plan(spec, sim), client,
+                                   n_workers=2)
+    pool.start(_batch_items(spec, sim))
+    with pytest.warns(DeprecationWarning, match="open_feed"):
+        feed = make_device_feed(None, client, mesh=None, depth=1)
+    assert feed.client is client and feed.pool is None
+    assert feed.get(timeout=10.0) is not None   # consume one, walk away early
+    feed.close(timeout=30.0)                    # must unpark the workers
+    joined = threading.Event()
+
+    def _join():
+        pool.join()
+        joined.set()
+
+    threading.Thread(target=_join, daemon=True).start()
+    assert joined.wait(timeout=30.0), "caller-owned pool.join() hung"
 
 
 def test_make_streaming_feed_shim_warns_and_returns_feed_protocol():
