@@ -6,8 +6,16 @@ Fault-tolerance contract:
   * ``latest_step``/``restore`` skip unfinished tmp dirs, so restart always
     resumes from the newest COMPLETE checkpoint;
   * ``keep`` newest checkpoints are retained, older ones garbage-collected
-    only after a successful save (never delete-then-write);
-  * a content checksum guards against partial/bit-rotted files.
+    only after a successful save (never delete-then-write); the newest
+    complete checkpoint is never GC'd;
+  * a content checksum guards against partial/bit-rotted files; a ``restore``
+    asked for the *latest* checkpoint falls back to the previous complete one
+    when the newest fails validation (an explicitly requested step never
+    falls back — the caller named it);
+  * ``feed_state`` (a ``repro.data.Feed.checkpoint()`` dict) is saved as a
+    sidecar INSIDE the checkpoint dir, so data-plane cursor and model state
+    publish atomically together — the exactly-once resume contract (§10)
+    needs them to name the same step.
 """
 from __future__ import annotations
 
@@ -33,7 +41,8 @@ class CheckpointManager:
         self.keep = keep
 
     # -- save -------------------------------------------------------------------
-    def save(self, step: int, state: Any, extra: Optional[dict] = None) -> Path:
+    def save(self, step: int, state: Any, extra: Optional[dict] = None,
+             feed_state: Optional[dict] = None) -> Path:
         arrays, treedef = _flatten(state)
         tmp = self.dir / f"tmp.step_{step:09d}"
         final = self.dir / f"step_{step:09d}"
@@ -59,6 +68,10 @@ class CheckpointManager:
             "extra": extra or {},
         }
         (tmp / "meta.json").write_text(json.dumps(meta))
+        if feed_state is not None:
+            # sidecar written BEFORE the atomic rename: model state and feed
+            # cursor publish together or not at all
+            (tmp / "feed.json").write_text(json.dumps(feed_state))
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                      # atomic publish
@@ -83,13 +96,45 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def feed_state(self, step: Optional[int] = None) -> Optional[dict]:
+        """The data-plane cursor saved atomically with ``step`` (default:
+        latest), or ``None`` when that checkpoint carried no feed sidecar.
+        Pass it to ``repro.data.open_feed(resume_from=...)``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        p = self.dir / f"step_{step:09d}" / "feed.json"
+        if not p.exists():
+            return None
+        return json.loads(p.read_text())
+
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[Any, int, dict]:
         """Restore into the structure of ``template``. ``shardings`` (optional
         pytree of NamedSharding) re-places leaves onto a mesh — possibly a
-        DIFFERENT mesh than the one that saved (elastic reshard)."""
-        step = step if step is not None else self.latest_step()
-        assert step is not None, "no checkpoint found"
+        DIFFERENT mesh than the one that saved (elastic reshard).
+
+        With ``step=None`` (resume-from-latest), a checkpoint that fails
+        validation (bit rot, torn write that survived the rename) falls back
+        to the next older COMPLETE checkpoint — crashing the restart on the
+        newest file's corruption would make one bad disk block fatal. The
+        newest failure is re-raised only when every checkpoint is bad. An
+        EXPLICIT ``step`` never falls back."""
+        if step is not None:
+            return self._restore_step(template, step, shardings)
+        steps = self.all_steps()
+        assert steps, "no checkpoint found"
+        first_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(template, s, shardings)
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
+        raise first_err  # type: ignore[misc]
+
+    def _restore_step(self, template: Any, step: int,
+                      shardings: Any = None) -> Tuple[Any, int, dict]:
         path = self.dir / f"step_{step:09d}"
         meta = json.loads((path / "meta.json").read_text())
         with np.load(path / "arrays.npz") as z:

@@ -24,6 +24,7 @@ from repro.data.spec import (
     SimSource,
     StreamSource,
     WarehouseSource,
+    resume_fingerprint,
 )
 
 __all__ = [
@@ -38,4 +39,5 @@ __all__ = [
     "cell_input_sharding",
     "compile_worker_plan",
     "open_feed",
+    "resume_fingerprint",
 ]

@@ -23,7 +23,13 @@ import numpy as np
 
 from repro.core.materialize import Materializer
 from repro.data.feed import Feed
-from repro.data.spec import DatasetSpec, SimSource, StreamSource, WarehouseSource
+from repro.data.spec import (
+    DatasetSpec,
+    SimSource,
+    StreamSource,
+    WarehouseSource,
+    resume_fingerprint,
+)
 from repro.dpp.affinity import plan_affine
 from repro.dpp.client import RebatchingClient
 from repro.dpp.elastic import DPPWorkerPool
@@ -87,6 +93,57 @@ def _batch_items(spec: DatasetSpec, sim: Any) -> List[list]:
     return items
 
 
+def _skip_rows(items: List[list], n: int) -> List[list]:
+    """Drop the first ``n`` example rows of a work-item list (crash resume):
+    whole items that fall inside the trained prefix disappear, the boundary
+    item is trimmed. Row ORDER is untouched, so an ordered feed over the
+    result continues the uninterrupted run's batch sequence exactly."""
+    if n <= 0:
+        return items
+    out: List[list] = []
+    remaining = n
+    for item in items:
+        if remaining <= 0:
+            out.append(item)
+        elif len(item) <= remaining:
+            remaining -= len(item)
+        else:
+            out.append(item[remaining:])
+            remaining = 0
+    return out
+
+
+def _warehouse_hour_rows(spec: DatasetSpec, sim: Any) -> List[tuple]:
+    """(hour, rows) pairs in replay order (epochs repeated) — the metadata
+    behind the checkpoint's observability cursor (hour + intra-hour offset)."""
+    src = spec.source
+    hours = (list(src.hours) if src.hours is not None
+             else sim.warehouse.hours())
+    per_hour = [(h, sim.warehouse.hour_rows(h)) for h in hours]
+    return per_hour * src.epochs
+
+
+def _check_resume(spec: DatasetSpec, resume_from: dict) -> tuple:
+    """Validate a checkpoint against the spec; returns (rows, batches)."""
+    fp = resume_fingerprint(spec)
+    got = resume_from.get("fingerprint")
+    if got is not None and got != fp:
+        raise ValueError(
+            "resume_from was checkpointed by a different DatasetSpec "
+            f"(fingerprint mismatch):\n  checkpoint: {got}\n  spec:       {fp}")
+    want_kind = "stream" if isinstance(spec.source, StreamSource) else "batch"
+    kind = resume_from.get("kind", want_kind)
+    if kind != want_kind:
+        raise ValueError(
+            f"resume_from is a {kind!r} checkpoint but the spec compiles a "
+            f"{want_kind!r} feed")
+    if not spec.ordered:
+        raise ValueError("resume requires DatasetSpec.ordered=True "
+                         "(deterministic in-order placement)")
+    return (int(resume_from.get("trained_rows", 0)),
+            int(resume_from.get("trained_batches", 0)))
+
+
 def cell_input_sharding(cell: Any, mesh: Any):
     """NamedSharding tree for a cell's batch argument (device feed target)."""
     if cell is None or mesh is None:
@@ -109,6 +166,7 @@ def open_feed(
     mesh: Any = None,
     prep_fn=None,
     controller: Any = None,
+    resume_from: Optional[dict] = None,
 ) -> Feed:
     """Compile ``spec`` against ``sim``'s data platform and start the feed.
 
@@ -117,7 +175,14 @@ def open_feed(
       exactly as the jit'd step expects);
     * ``prep_fn`` — model-specific host transform; runs inside the prefetch
       thread when there is one, else on the consumer's ``get``;
-    * ``controller`` — optional ``ElasticController`` for live pool resizing.
+    * ``controller`` — optional ``ElasticController`` for live pool resizing;
+    * ``resume_from`` — a ``Feed.checkpoint()`` dict (saved by the
+      ``CheckpointManager`` as the model checkpoint's ``feed_state`` sidecar):
+      the compiled feed produces exactly the examples the killed run had NOT
+      yet trained — batch feeds skip the trained row prefix of the canonical
+      item order and resume the reshuffle emit counter; streaming feeds apply
+      the checkpoint's ``ReplayFilter`` chain to the warehouse re-replay and
+      dedupe live ids below the watermark (exactly-once, §10).
 
     Returns a started ``Feed``; batch and streaming specs yield the same
     protocol. The caller owns shutdown: ``close()`` (or iterate to
@@ -129,11 +194,23 @@ def open_feed(
     depth = (spec.prefetch_depth if spec.prefetch_depth is not None
              else (2 if cell is not None else 0))
     sharding = cell_input_sharding(cell, mesh)
+    base_rows, base_batches = (
+        _check_resume(spec, resume_from) if resume_from else (0, 0))
 
     if isinstance(spec.source, StreamSource):
+        from repro.streaming.backfill import ReplayFilter
         from repro.streaming.session import StreamingSession
         from repro.streaming.source import MicroBatchConfig
 
+        filters = []
+        if resume_from:
+            stream_state = resume_from.get("stream") or {}
+            filters = [ReplayFilter.from_state(d)
+                       for d in stream_state.get("filters", [])]
+            if not spec.source.backfill:
+                raise ValueError(
+                    "streaming resume requires StreamSource(backfill=True): "
+                    "the warehouse leg is the durable replay source")
         session = StreamingSession(
             sim.stream, plan,
             full_batch_size=spec.batch_size,
@@ -145,7 +222,20 @@ def open_feed(
             shuffle_seed=spec.reshuffle_seed,
             buffer_batches=spec.buffer_batches,
             backfill_from=sim.warehouse if spec.source.backfill else None,
-        ).start()
+            ordered=spec.ordered,
+            max_item_retries=spec.max_item_retries,
+            emit_seq_start=base_batches,
+            resume_filters=filters,
+            backfill_start_hour=spec.source.backfill_start_hour,
+            backfill_end_hour=spec.source.backfill_end_hour,
+        )
+        if spec.ordered and session.coordinator is not None:
+            # BEFORE start, and only when the feed will actually be
+            # checkpointable (the Feed's pops are what bound this FIFO): the
+            # resume cursor reads every emitted batch's row count from it
+            # (prep_fn may reshape batches)
+            session.client.track_emitted_rows = True
+        session.start()
         prefetcher = None
         inner: Any = session
         if depth > 0:
@@ -154,15 +244,26 @@ def open_feed(
             prefetcher = DevicePrefetcher(session, depth=depth,
                                           sharding=sharding, prep_fn=prep_fn)
             inner = prefetcher
+        resume_meta = None
+        if spec.ordered and session.coordinator is not None:
+            resume_meta = {"fingerprint": resume_fingerprint(spec),
+                           "base_rows": base_rows,
+                           "base_batches": base_batches}
         return Feed(inner, session=session, prefetcher=prefetcher,
-                    prep_fn=prep_fn, spec=spec)
+                    prep_fn=prep_fn, spec=spec, resume_meta=resume_meta)
 
     client = RebatchingClient(spec.batch_size,
                               buffer_batches=spec.buffer_batches,
-                              shuffle_seed=spec.reshuffle_seed)
+                              shuffle_seed=spec.reshuffle_seed,
+                              emit_seq_start=base_batches)
+    # BEFORE the pool starts: the Feed's resume cursor reads every emitted
+    # batch's row count from this FIFO (prep_fn may reshape batches)
+    client.track_emitted_rows = spec.ordered
     pool = DPPWorkerPool.from_plan(plan, client, n_workers=spec.n_workers,
-                                   controller=controller)
-    pool.start(_batch_items(spec, sim))
+                                   controller=controller,
+                                   ordered=spec.ordered,
+                                   max_item_retries=spec.max_item_retries)
+    pool.start(_skip_rows(_batch_items(spec, sim), base_rows))
     prefetcher = None
     inner = client
     if depth > 0:
@@ -171,5 +272,12 @@ def open_feed(
         prefetcher = DevicePrefetcher(client, depth=depth, sharding=sharding,
                                       prep_fn=prep_fn)
         inner = prefetcher
+    resume_meta = None
+    if spec.ordered:
+        resume_meta = {"fingerprint": resume_fingerprint(spec),
+                       "base_rows": base_rows,
+                       "base_batches": base_batches}
+        if isinstance(spec.source, WarehouseSource):
+            resume_meta["hour_rows"] = _warehouse_hour_rows(spec, sim)
     return Feed(inner, client=client, pool=pool, prefetcher=prefetcher,
-                prep_fn=prep_fn, spec=spec)
+                prep_fn=prep_fn, spec=spec, resume_meta=resume_meta)

@@ -24,10 +24,11 @@ without a ``DevicePrefetcher`` on top — the consumer sees ONE protocol:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Deque, Dict, Iterator, Optional
 
 from repro.dpp.client import ClientStats
 
@@ -89,6 +90,7 @@ class Feed:
         prep_fn=None,
         spec=None,
         share_stats=None,
+        resume_meta=None,
     ):
         self._inner = inner
         self.client = client if client is not None else getattr(
@@ -102,6 +104,19 @@ class Feed:
         # prep applied consumer-side when there is no prefetch stage to run it
         self._prep_fn = prep_fn if prefetcher is None else None
         self._closed = False
+        # -- crash-safe checkpoint accounting (§10) ---------------------------
+        # ``resume_meta`` is attached by open_feed on checkpointable feeds:
+        # {"fingerprint", "base_rows", "base_batches", "hour_rows"?}. The FIFO
+        # below maps delivered batches to trained batches: get() pushes each
+        # batch's row count, record_train_step() pops the oldest — a batch the
+        # prefetcher pulled ahead (or the trainer fetched but never stepped)
+        # is therefore NOT counted as trained, which is exactly the set a
+        # resume must re-produce.
+        self._resume_meta = resume_meta
+        self._pending_rows: Deque[int] = collections.deque()
+        self._ckpt_lock = threading.Lock()
+        self._trained_rows = 0
+        self._trained_batches = 0
         self._join_error: list = []
         self._joiner: Optional[threading.Thread] = None
         if pool is not None and session is None:
@@ -127,10 +142,24 @@ class Feed:
         path), propagated to whichever stage owns the counters."""
         g = getattr(self._inner, "get", None)
         if g is not None:                       # DevicePrefetcher stage
-            return g(timeout=timeout, record=record)
-        out = self._inner.get_full_batch(timeout=timeout, record=record)
-        if out is not None and self._prep_fn is not None:
-            out = self._prep_fn(out)
+            out = g(timeout=timeout, record=record)
+        else:
+            out = self._inner.get_full_batch(timeout=timeout, record=record)
+            if out is not None and self._prep_fn is not None:
+                out = self._prep_fn(out)
+        if out is not None and record and self._resume_meta is not None:
+            # row count from the CLIENT's emission FIFO, not the delivered
+            # batch: a prep_fn may reshape batches (e.g. pre-split grad-accum
+            # microbatches) and the resume cursor must count source rows
+            emitted = getattr(self.client, "emitted_rows", None)
+            if emitted:
+                rows = emitted.popleft()
+            else:
+                v = next(iter(out.values()))
+                shape = getattr(v, "shape", None)   # numpy OR device arrays
+                rows = int(shape[0]) if shape else len(v)
+            with self._ckpt_lock:
+                self._pending_rows.append(rows)
         return out
 
     def get_full_batch(self, timeout: Optional[float] = None,
@@ -158,6 +187,16 @@ class Feed:
 
     # -- trainer backchannel ---------------------------------------------------
     def record_train_step(self, seconds: float) -> None:
+        if self._resume_meta is not None:
+            with self._ckpt_lock:
+                if self._pending_rows:   # oldest delivered batch now trained
+                    self._trained_rows += self._pending_rows.popleft()
+                    self._trained_batches += 1
+                trained = self._trained_rows
+            if self.session is not None:
+                # steady-state bound on the session's resume ledger even when
+                # the trainer never checkpoints
+                self.session.trim_ledger(trained)
         rec = getattr(self._inner, "record_train_step", None)
         if rec is not None:
             rec(seconds)
@@ -201,6 +240,60 @@ class Feed:
             peak_workers=getattr(self.pool, "peak_workers", 0),
             stale_dropped=getattr(self.session, "stale_dropped", 0),
         )
+
+    # -- crash-safe checkpoint (§10) --------------------------------------------
+    @property
+    def can_checkpoint(self) -> bool:
+        """True iff this feed was compiled by ``open_feed`` with resumable
+        plumbing (ordered placement; for streaming, the warehouse backfill
+        leg). Shim-constructed feeds cannot checkpoint."""
+        return self._resume_meta is not None
+
+    def checkpoint(self) -> Dict[str, Any]:
+        """Minimal cursor state for exactly-once resume (§10): pass the dict
+        to ``open_feed(spec, sim, resume_from=...)`` after a restart (the
+        ``CheckpointManager`` saves it as a ``feed_state`` sidecar atomically
+        with the model state).
+
+        Counts only rows whose gradient was APPLIED (``record_train_step``
+        consumed them) — batches pulled ahead by a prefetcher, or delivered
+        but killed before the step, are re-produced by the resumed feed.
+        Call from the training thread (the same serialization point the
+        model checkpoint is taken at)."""
+        if self._resume_meta is None:
+            raise ValueError(
+                "checkpoint() requires a spec-compiled, ordered feed "
+                "(repro.data.open_feed); shim feeds cannot checkpoint")
+        meta = self._resume_meta
+        with self._ckpt_lock:
+            local_rows = self._trained_rows
+            local_batches = self._trained_batches
+        state: Dict[str, Any] = {
+            "kind": "stream" if self.session is not None else "batch",
+            "fingerprint": meta["fingerprint"],
+            "trained_rows": meta["base_rows"] + local_rows,
+            "trained_batches": meta["base_batches"] + local_batches,
+        }
+        if self.session is not None:
+            state["stream"] = self.session.checkpoint_state(local_rows)
+        else:
+            hour_rows = meta.get("hour_rows")
+            if hour_rows:
+                state["warehouse"] = self._warehouse_cursor(
+                    hour_rows, state["trained_rows"])
+        return state
+
+    @staticmethod
+    def _warehouse_cursor(hour_rows, trained_rows: int) -> Dict[str, int]:
+        """Observability view of a batch cursor: (hour, intra-hour offset) of
+        the next untrained example in the warehouse replay order."""
+        remaining = trained_rows
+        for hour, n in hour_rows:
+            if remaining < n:
+                return {"hour": int(hour), "offset": int(remaining)}
+            remaining -= n
+        last = hour_rows[-1]
+        return {"hour": int(last[0]), "offset": int(last[1])}  # exhausted
 
     # -- lifecycle -------------------------------------------------------------
     def stop(self) -> None:

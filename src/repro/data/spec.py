@@ -54,11 +54,19 @@ class SimSource:
 @dataclasses.dataclass(frozen=True)
 class StreamSource:
     """Live training-example stream, optionally preceded by the batch→stream
-    catch-up backfill (warehouse replay with the exactly-once watermark)."""
+    catch-up backfill (warehouse replay with the exactly-once watermark).
+
+    ``backfill_start_hour``/``backfill_end_hour`` bound the replay range
+    (None = the warehouse's full sealed sweep at feed-open time). These are
+    OPERATIONAL knobs, not dataset identity: a resumed feed may legitimately
+    replay a longer range than the killed run did (the warehouse head moved),
+    so they are excluded from the resume fingerprint."""
 
     backfill: bool = True
     micro_batch_examples: int = 8
     micro_batch_delay_s: float = 0.05
+    backfill_start_hour: Optional[int] = None
+    backfill_end_hour: Optional[int] = None
 
     def __post_init__(self):
         if self.micro_batch_examples < 1:
@@ -104,6 +112,14 @@ class DatasetSpec:
     buffer_batches: int = 4
     window_cache_size: int = 256
     features: Optional[FeatureSpec] = None
+    # fault tolerance (§10): ``ordered`` routes finished base batches through
+    # the pool's reorder buffer so full batches compose deterministically in
+    # work-item order — the property crash-safe checkpoint/resume and the
+    # byte-identical chaos guarantee rest on; ``max_item_retries`` bounds
+    # pool-level self-healing (requeue + respawn) per work item, 0 = a worker
+    # exception is immediately fatal (the pre-§10 behavior)
+    ordered: bool = True
+    max_item_retries: int = 3
 
     def __post_init__(self):
         if self.consistency not in _CONSISTENCY:
@@ -124,6 +140,8 @@ class DatasetSpec:
             raise ValueError("buffer_batches must be >= 1")
         if self.window_cache_size < 0:
             raise ValueError("window_cache_size must be >= 0")
+        if self.max_item_retries < 0:
+            raise ValueError("max_item_retries must be >= 0")
         if (self.features is not None
                 and self.features.seq_len != self.tenant.seq_len):
             # a mismatch silently truncates (or over-pads) every sequence the
@@ -154,3 +172,26 @@ class DatasetSpec:
         traits = tuple(t for t in self.tenant.all_traits(schema)
                        if t != "timestamp")
         return FeatureSpec(seq_len=self.tenant.seq_len, uih_traits=traits)
+
+
+def resume_fingerprint(spec: DatasetSpec) -> str:
+    """Dataset identity for checkpoint/resume compatibility (§10).
+
+    Covers every field that determines WHAT rows the feed produces in WHICH
+    order (tenant projection, features, source identity, batch size, reshuffle
+    seed, consistency/generation policy, ordering). Deliberately EXCLUDES
+    operational knobs that may legitimately change across restarts without
+    breaking exactly-once: worker count, base batch size, buffering, prefetch
+    depth, micro-batch bounds, and the streaming backfill hour range (the
+    warehouse head moves between runs — the resumed sweep is *expected* to be
+    longer than the killed run's)."""
+    src = spec.source
+    if isinstance(src, StreamSource):
+        src_key: tuple = ("stream", src.backfill)
+    elif isinstance(src, WarehouseSource):
+        src_key = ("warehouse", src.hours, src.epochs)
+    else:
+        src_key = ("sim", src.epochs, src.shuffle, src.min_rows)
+    return repr((repr(spec.tenant), src_key, spec.consistency,
+                 spec.generations, spec.batch_size, spec.reshuffle_seed,
+                 repr(spec.features), spec.ordered))

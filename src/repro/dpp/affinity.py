@@ -31,13 +31,29 @@ def plan_affine(
     n_shards: int,
     base_batch_size: int,
 ) -> AffinityPlan:
-    """User-clustered plan: sort by (shard, user, request_ts), cut into base
-    batches. All lookups in an item target one shard; same-user adjacency
-    maximizes window-cache hits."""
+    """User-clustered plan: sort by (shard, user, request_ts, request_id) —
+    a TOTAL order, so the plan is invariant under input permutation — and cut
+    into base batches at shard boundaries. All lookups in an item target
+    exactly ONE shard (zero cross-shard fanout, the §4.2.3 symmetric-sharding
+    goal); same-user adjacency maximizes window-cache hits."""
     order = sorted(
-        examples, key=lambda e: (shard_of(e.user_id, n_shards), e.user_id, e.request_ts)
+        examples,
+        key=lambda e: (shard_of(e.user_id, n_shards), e.user_id, e.request_ts,
+                       e.request_id),
     )
-    return _plan(order, n_shards, base_batch_size)
+    items: List[List[TrainingExample]] = []
+    run: List[TrainingExample] = []
+    run_shard = None
+    for e in order:
+        shard = shard_of(e.user_id, n_shards)
+        if run and (shard != run_shard or len(run) >= base_batch_size):
+            items.append(run)
+            run = []
+        run_shard = shard
+        run.append(e)
+    if run:
+        items.append(run)
+    return _plan(items, n_shards)
 
 
 def plan_arrival_order(
@@ -47,13 +63,15 @@ def plan_arrival_order(
 ) -> AffinityPlan:
     """Baseline plan: arrival order (no clustering) — what a Fat-Row-era
     pipeline does; used as the benchmark control."""
-    return _plan(list(examples), n_shards, base_batch_size)
-
-
-def _plan(order, n_shards, base_batch_size) -> AffinityPlan:
+    order = list(examples)
     items = [
-        order[i : i + base_batch_size] for i in range(0, len(order), base_batch_size)
+        order[i : i + base_batch_size]
+        for i in range(0, len(order), base_batch_size)
     ]
+    return _plan(items, n_shards)
+
+
+def _plan(items: List[List[TrainingExample]], n_shards: int) -> AffinityPlan:
     fanouts = []
     amortizable = 0
     for item in items:

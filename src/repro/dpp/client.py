@@ -20,11 +20,12 @@ Also hosts the GPU-starvation accounting the elastic controller consumes.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, Iterator, List, Optional
+from typing import Deque, Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -87,6 +88,7 @@ class RebatchingClient:
         full_batch_size: int,
         buffer_batches: int = 8,
         shuffle_seed: Optional[int] = 0,
+        emit_seq_start: int = 0,
     ):
         self.full_batch_size = full_batch_size
         self._q: "queue.Queue" = queue.Queue(maxsize=buffer_batches)
@@ -95,12 +97,25 @@ class RebatchingClient:
         self.shuffle_seed = shuffle_seed
         # producer-side emit counter: the reshuffle seed must NOT depend on
         # stats.full_batches (incremented by the CONSUMER), else the shuffle
-        # of batch k varies with trainer timing and runs aren't reproducible
-        self._emit_seq = 0
+        # of batch k varies with trainer timing and runs aren't reproducible.
+        # ``emit_seq_start`` resumes the counter after a crash (Feed
+        # checkpoint/resume): batch k of the resumed run reshuffles exactly
+        # like batch ``start + k`` of the uninterrupted run would have.
+        self._emit_seq = emit_seq_start
         self._slot: Optional[_Slot] = None      # the single partially-filled slot
         self._free: List[Dict[str, np.ndarray]] = []   # recycled slot storage
         self._max_free = buffer_batches
         self.stats = ClientStats()
+        # row count of each emitted batch, in emission order (opt-in): the
+        # Feed's crash-safe cursor reads delivered-batch sizes from here
+        # instead of inspecting batch arrays (a prep_fn may reshape them).
+        # Exact under single-emitter ordering (the pool's placer / close());
+        # consumers that bypass the Feed (shutdown drains) leave stale
+        # entries behind, which is fine — checkpoints are never taken after
+        # training stopped. Off by default so feeds without a checkpointing
+        # consumer never accrete it.
+        self.track_emitted_rows = False
+        self.emitted_rows: Deque[int] = collections.deque()
         # end-of-stream sentinel observed by the consumer: lets a wall-clock-
         # bounded trainer distinguish "stream over" from "get timed out"
         self.ended = False
@@ -174,6 +189,8 @@ class RebatchingClient:
         if done:
             # emit OUTSIDE the lock: the bounded queue may block on a slow
             # consumer and producers must not hold the slot lock meanwhile
+            if self.track_emitted_rows:
+                self.emitted_rows.append(self.full_batch_size)
             self._q.put(slot.arrays)
 
     def _place(self, rows: int, template_fn, write_fn) -> None:
@@ -313,6 +330,8 @@ class RebatchingClient:
                 order = slot.inv[:n]
                 tail = {k: v[order] for k, v in slot.arrays.items()}
                 tail = reshuffle(tail, self.shuffle_seed + slot.emit_seq)
+            if self.track_emitted_rows:
+                self.emitted_rows.append(n)
             self._q.put(tail)
         self._q.put(None)
 

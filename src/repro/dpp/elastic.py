@@ -7,14 +7,40 @@ items straight into the trainer's slot-based rebatching client, resizing live
 on the controller's decisions. ``StragglerAwarePool`` re-dispatches work items
 whose worker exceeded the straggler deadline (speculative execution), and
 survives worker crashes.
+
+**Self-healing** (``max_item_retries > 0``): a worker that dies mid-item —
+store IOError, decode corruption, a crash injected by the fault harness
+(``repro.testing``) — requeues its work item at the FRONT of the dispatch
+order with a per-item attempt count, and a replacement worker (fresh state,
+fresh caches) is spawned before the dying thread exits. Materialization is a
+pure read, so re-running an item is safe; the item never reached the client
+(failures inside ``put`` are NOT healed — a partially placed base batch
+poisons its slot and retrying would duplicate rows), so slot accounting stays
+exact and the output is byte-identical to a fault-free run. An item that
+exhausts its retries is handed to ``on_abandon`` (streaming drop semantics:
+release its generation leases) when set, else its error is fatal — batch
+training must never silently drop examples. Surfaced via ``WorkerStats``:
+``worker_restarts``, ``items_requeued``, ``lease_recoveries``.
+
+**Ordered placement** (``ordered=True``): workers still materialize+featurize
+concurrently, but finished base batches pass through a reorder buffer and a
+single placer thread that copies them into the rebatching client in work-item
+sequence order. Emitted full batches then compose deterministically from the
+item list regardless of worker count, scheduling, crashes, or retries — the
+property both the chaos tests ("byte-identical to the fault-free run") and
+``Feed.checkpoint`` exactly-once resume (rows consumed = a prefix of the
+canonical example order) are built on. Admission control bounds how far ahead
+of the placement cursor a worker may start (``4 × workers``), so a slow head
+item cannot buffer the whole epoch in RAM.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -76,6 +102,11 @@ class DPPWorkerPool:
         control_interval_s: float = 0.25,
         close_client: bool = True,
         jagged: bool = True,
+        max_item_retries: int = 0,
+        ordered: bool = False,
+        on_place: Optional[Callable[[List], None]] = None,
+        on_abandon: Optional[Callable[[List, BaseException], None]] = None,
+        on_skip: Optional[Callable[[List], None]] = None,
     ):
         self.worker_factory = worker_factory
         self.client = client
@@ -102,6 +133,32 @@ class DPPWorkerPool:
         self._monitor: Optional[threading.Thread] = None
         self.items_done = 0
         self.peak_workers = n_workers
+        # -- self-healing (see class docstring) -------------------------------
+        self.max_item_retries = max_item_retries
+        self.on_abandon = on_abandon
+        self._seq = 0                       # next work-item sequence number
+        # retried tasks go to the FRONT of the dispatch order (ahead of the
+        # shared queue): with one worker this restores exact item order, with
+        # N it minimizes reorder-buffer stall after a crash
+        self._retry: Deque[Tuple[int, int, List]] = collections.deque()
+        self.worker_restarts = 0
+        self.items_requeued = 0
+        self.items_abandoned = 0
+        self.lease_recoveries = 0   # via record_lease_recoveries (lock-guarded)
+        # -- ordered placement -------------------------------------------------
+        self.ordered = ordered
+        self.on_place = on_place
+        # called (in placement order) for an item that reached its placement
+        # turn WITHOUT output — abandoned after retries. Consumers tracking
+        # stream positions (the session's resume cursor) must see skips too.
+        self.on_skip = on_skip
+        self._place_cv = threading.Condition()
+        # seq -> (put_fn, out, item); (None, None, None) = tombstone
+        self._obuf: Dict[int, Tuple] = {}
+        self._next_place = 0
+        self._obuf_cap = max(8, 4 * n_workers)
+        self._place_dead = False
+        self._placer: Optional[threading.Thread] = None
 
     @classmethod
     def from_plan(cls, plan, client, **kwargs) -> "DPPWorkerPool":
@@ -112,6 +169,12 @@ class DPPWorkerPool:
         return cls(lambda: DPPWorker.from_plan(plan), client, **kwargs)
 
     # -- worker loop -------------------------------------------------------------
+    def _task(self, item: List) -> Tuple[int, int, List]:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        return (seq, 0, item)
+
     def _worker_loop(self, worker) -> None:
         t0 = time.perf_counter()
         try:
@@ -120,20 +183,40 @@ class DPPWorkerPool:
                     if self._retire > 0:
                         self._retire -= 1
                         return  # cooperative shrink: retire this thread
+                    task = self._retry.popleft() if self._retry else None
+                if task is None:
+                    try:
+                        task = self._items.get(timeout=0.05)
+                    except queue.Empty:
+                        if self._feed_done.is_set() and self._items.empty():
+                            with self._lock:
+                                if not self._retry:
+                                    return  # stream over AND queues drained
+                        continue    # live feed: stay parked for the next item
+                seq, attempts, item = task
+                if self.ordered and not self._admit(seq):
+                    # placement is wedged (placer died): hand the task back so
+                    # any surviving sibling can observe it, and bail out
+                    with self._lock:
+                        self._retry.append(task)
+                    return
                 try:
-                    item = self._items.get(timeout=0.05)
-                except queue.Empty:
-                    if self._feed_done.is_set():
-                        return  # stream over AND queue drained
-                    continue    # live feed: stay parked for the next item
-                if self.jagged and hasattr(worker, "process_jagged"):
-                    out = worker.process_jagged(item)
-                    if out is not None:   # None = worker dropped every example
-                        self.client.put_jagged(out)
-                else:
-                    out = worker.process(item)
-                    if out is not None:
-                        self.client.put(out)
+                    if self.jagged and hasattr(worker, "process_jagged"):
+                        out = worker.process_jagged(item)
+                        put = self.client.put_jagged
+                    else:
+                        out = worker.process(item)
+                        put = self.client.put
+                except BaseException as exc:
+                    # the item never reached the client: requeue-and-respawn is
+                    # safe (materialization is a pure read). Failures inside
+                    # ``put`` below are NOT healed — a partial placement
+                    # poisons its slot, so a retry would duplicate rows.
+                    if self._heal(seq, attempts, item, exc):
+                        return  # replacement spawned; this thread retires
+                    self._tombstone(seq)
+                    raise
+                self._deliver(seq, item, out, put)
                 with self._lock:
                     self.items_done += 1
         except BaseException as e:
@@ -142,7 +225,140 @@ class DPPWorkerPool:
         finally:
             with self._lock:
                 self._live -= 1
+            if self.ordered:
+                with self._place_cv:
+                    self._place_cv.notify_all()  # placer re-checks liveness
             worker.stats.total_time_s += time.perf_counter() - t0
+
+    # -- self-healing ------------------------------------------------------------
+    def _heal(self, seq: int, attempts: int, item: List,
+              exc: BaseException) -> bool:
+        """Recover from a worker dying mid-item. Returns True when handled
+        (item requeued or abandoned, replacement spawned); False means the
+        failure is fatal and the caller must record it."""
+        if self.max_item_retries <= 0:
+            return False
+        attempts += 1
+        if attempts > self.max_item_retries:
+            if self.on_abandon is None:
+                # batch training: silently dropping examples is worse than
+                # dying — surface the poison item's error from join()
+                return False
+            with self._lock:
+                self.items_abandoned += 1
+            try:
+                self.on_abandon(item, exc)
+            except BaseException as cb_exc:
+                with self._lock:
+                    self._errors.append(cb_exc)
+            self._tombstone(seq, item)
+        else:
+            with self._lock:
+                self._retry.append((seq, attempts, item))
+                self.items_requeued += 1
+        self._respawn()
+        return True
+
+    def record_lease_recoveries(self, n: int) -> None:
+        """Count leases released through crash recovery (the session's
+        ``on_abandon`` calls this; every pool counter mutates under the
+        lock so concurrent abandons cannot lose updates)."""
+        with self._lock:
+            self.lease_recoveries += n
+
+    def _respawn(self) -> None:
+        """Replace a dying worker with a fresh one (fresh materializer, fresh
+        caches) BEFORE the dying thread exits, so the logical worker count —
+        and the guarantee that a requeued head item finds a runnable thread —
+        never dips."""
+        with self._lock:
+            self.worker_restarts += 1
+            if self._retire > 0:
+                self._retire -= 1   # a pending shrink wanted one fewer anyway
+                return
+            worker = self.worker_factory()
+            th = threading.Thread(target=self._worker_loop, args=(worker,),
+                                  daemon=True)
+            self._workers.append(worker)
+            self._threads.append(th)
+            self._live += 1
+            th.start()
+
+    # -- ordered placement (reorder buffer -> single placer thread) ---------------
+    def _admit(self, seq: int) -> bool:
+        """Bound how far ahead of the placement cursor a worker may start: a
+        slow/crashed head item must not let the rest of the pool materialize
+        the whole epoch into the reorder buffer. The head (and any already
+        admitted retry) is always admitted, so recovery cannot deadlock."""
+        with self._place_cv:
+            while seq >= self._next_place + self._obuf_cap:
+                if self._place_dead or self._done.is_set():
+                    return False
+                self._place_cv.wait(timeout=0.1)
+            return not self._place_dead
+
+    def _deliver(self, seq: int, item: List, out, put) -> None:
+        if not self.ordered:
+            if self.on_place is not None:
+                self.on_place(item)     # before put, as in the placer
+            if out is not None:   # None = worker dropped every example
+                put(out)
+            return
+        with self._place_cv:
+            self._obuf[seq] = (put, out, item)
+            self._place_cv.notify_all()
+
+    def _tombstone(self, seq: int, item: Optional[List] = None) -> None:
+        """Mark a seq that will never produce output (abandoned item or fatal
+        failure) so ordered placement can advance past it. An abandoned item
+        rides along so ``on_skip`` can observe it at its placement turn."""
+        if not self.ordered:
+            return
+        with self._place_cv:
+            self._obuf[seq] = (None, None, item)
+            self._place_cv.notify_all()
+
+    def _placer_loop(self) -> None:
+        try:
+            while True:
+                with self._place_cv:
+                    while self._next_place not in self._obuf:
+                        if self._placer_done():
+                            return
+                        self._place_cv.wait(timeout=0.05)
+                    put, out, item = self._obuf.pop(self._next_place)
+                # place OUTSIDE the cv: ``put`` may block on the client's
+                # bounded slot queue (that stall IS the pool's backpressure —
+                # admission gates on the cursor, which only moves below).
+                # on_place runs BEFORE put: the session's resume ledger must
+                # cover a row before the batch containing it can possibly be
+                # delivered/trained/checkpointed (ledger-ahead is harmless,
+                # ledger-behind would crash a racing checkpoint())
+                if put is not None:
+                    if item is not None and self.on_place is not None:
+                        self.on_place(item)
+                    if out is not None:
+                        put(out)
+                elif item is not None and self.on_skip is not None:
+                    self.on_skip(item)   # abandoned item reached its turn
+                with self._place_cv:
+                    self._next_place += 1
+                    self._place_cv.notify_all()
+        except BaseException as e:
+            with self._lock:
+                self._errors.append(e)
+            with self._place_cv:
+                self._place_dead = True      # unwedge admission waiters
+                self._place_cv.notify_all()
+
+    def _placer_done(self) -> bool:
+        """Call with ``_place_cv`` held and ``_next_place`` not buffered: no
+        further deposit can arrive once the feed is finished and no worker is
+        alive to produce (or requeue) one."""
+        if not self._feed_done.is_set():
+            return False
+        with self._lock:
+            return self._live == 0 and not self._retry
 
     def _resize_to(self, target: int) -> None:
         """Grow by spawning threads; shrink by issuing retirement tokens."""
@@ -205,7 +421,7 @@ class DPPWorkerPool:
     def start(self, items: Sequence[List]) -> "DPPWorkerPool":
         """Dispatch a STATIC work list; workers exit once it is drained."""
         for item in items:
-            self._items.put(item)
+            self._items.put(self._task(item))
         self._feed_done.set()
         self._start_threads()
         return self
@@ -229,6 +445,7 @@ class DPPWorkerPool:
         def feeder() -> None:
             try:
                 for item in items:
+                    task = self._task(item)
                     while True:
                         # NO live workers + recorded errors = the pool died:
                         # stop feeding (checked per attempt, not just on
@@ -241,7 +458,7 @@ class DPPWorkerPool:
                         if dead:
                             return
                         try:
-                            self._items.put(item, timeout=0.1)
+                            self._items.put(task, timeout=0.1)
                             break
                         except queue.Full:
                             continue
@@ -259,6 +476,10 @@ class DPPWorkerPool:
 
     def _start_threads(self) -> None:
         self._resize_to(self._n_initial)
+        if self.ordered and self._placer is None:
+            self._placer = threading.Thread(target=self._placer_loop,
+                                            daemon=True, name="dpp-placer")
+            self._placer.start()
         if self.controller is not None:
             self._monitor = threading.Thread(target=self._monitor_loop,
                                              daemon=True)
@@ -301,6 +522,8 @@ class DPPWorkerPool:
             if self._monitor is not None:
                 self._monitor.join()
             self._join_workers()   # monitor may have spawned a final thread
+            if self._placer is not None:
+                self._placer.join()
         finally:
             # close EVEN ON worker failure: the consumer must receive the
             # end-of-stream sentinel or it blocks forever on a dead feed
@@ -338,6 +561,10 @@ class DPPWorkerPool:
             out.dedup_hits += s.dedup_hits
             out.decode_cache_hits += s.decode_cache_hits
             out.parallel_shards += s.parallel_shards
+        with self._lock:
+            out.worker_restarts += self.worker_restarts
+            out.items_requeued += self.items_requeued
+            out.lease_recoveries += self.lease_recoveries
         return out
 
 

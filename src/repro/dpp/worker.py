@@ -65,6 +65,10 @@ class WorkerStats:
     dedup_hits: int = 0           # requests answered by an in-plan twin
     decode_cache_hits: int = 0    # stripe decodes served from the decode LRU
     parallel_shards: int = 0      # cumulative shard fanout of batched scans
+    # self-healing (pool-level recovery, merged in by merged_worker_stats)
+    worker_restarts: int = 0      # workers that died mid-item and were replaced
+    items_requeued: int = 0       # work items re-dispatched after a crash
+    lease_recoveries: int = 0     # generation leases released by crash recovery
 
     @property
     def busy_time_s(self) -> float:

@@ -22,6 +22,15 @@ from repro.storage.sharding import shard_of
 MS_PER_HOUR = 3_600_000
 
 
+class StreamDisconnect(ConnectionError):
+    """Transient consumer-side stream failure (broker hiccup, network blip).
+
+    The broker retains unacked messages across a disconnect, so consumers
+    recover by reconnecting and re-polling — nothing is lost or duplicated.
+    ``StreamingSource`` heals this in place (``SourceStats.reconnects``);
+    ``repro.testing.FaultyStream`` injects it deterministically."""
+
+
 class TrainingExampleStream:
     """Bounded in-memory FIFO modelling the distributed messaging stream.
 
@@ -231,6 +240,14 @@ class Warehouse:
             blobs = part.buckets[bucket]
             self.bytes_read += sum(len(b) for b in blobs)
             yield [TrainingExample.from_bytes(b, self.schema) for b in blobs]
+
+    def hour_rows(self, hour: int) -> int:
+        """Row count of one hour's partition WITHOUT reading it (no byte
+        accounting) — feed checkpoint cursors are metadata-only."""
+        part = self._partitions.get(hour)
+        if part is None:
+            return 0
+        return sum(len(blobs) for blobs in part.buckets.values())
 
     def total_bytes(self) -> int:
         return sum(p.examples_bytes() for p in self._partitions.values())

@@ -9,13 +9,14 @@ storage-side halves of the protocol live in
 ``repro.storage.immutable_store`` (generation leases) and
 ``repro.core.materialize`` (stale-generation remediation).
 """
-from repro.streaming.backfill import BackfillCoordinator, BackfillStats
+from repro.streaming.backfill import BackfillCoordinator, BackfillStats, ReplayFilter
 from repro.streaming.session import FreshnessStats, StreamingSession
 from repro.streaming.source import MicroBatchConfig, SourceStats, StreamingSource
 
 __all__ = [
     "BackfillCoordinator",
     "BackfillStats",
+    "ReplayFilter",
     "FreshnessStats",
     "MicroBatchConfig",
     "SourceStats",

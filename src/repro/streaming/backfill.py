@@ -22,11 +22,41 @@ gap-tolerant.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Sequence
 
 from repro.core.versioning import TrainingExample
 from repro.storage.stream import Warehouse
 from repro.streaming.source import StreamingSource
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayFilter:
+    """One crash epoch's exactly-once exclusion (crash-safe resume, §10).
+
+    A killed trainer's ``Feed.checkpoint`` records, per run, what was already
+    trained: a PREFIX of the warehouse replay order (``skip_rows`` — rows
+    trained while backfilling) plus a request-id INTERVAL ``(drop_lo,
+    drop_hi]`` (rows trained from the live stream after the flip; live ids
+    arrive monotonically, so the trained set is exactly an id interval above
+    that epoch's replay watermark). On restart the coordinator re-replays the
+    (now longer) warehouse sweep with the filter chain applied in crash-epoch
+    order: each filter sees only rows that survived the earlier epochs'
+    filters, so repeated kill/resume cycles compose. Rows in an epoch's old
+    replay range have ids <= that epoch's watermark ``drop_lo`` and can never
+    be interval-dropped by it — prefix counting stays exact."""
+
+    skip_rows: int = 0
+    drop_lo: int = -1     # exclusive lower bound of the trained-live interval
+    drop_hi: int = -1     # inclusive upper bound; hi < lo disables
+
+    def to_state(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_state(cls, d: dict) -> "ReplayFilter":
+        return cls(skip_rows=int(d.get("skip_rows", 0)),
+                   drop_lo=int(d.get("drop_lo", -1)),
+                   drop_hi=int(d.get("drop_hi", -1)))
 
 
 @dataclasses.dataclass
@@ -36,6 +66,7 @@ class BackfillStats:
     warehouse_examples: int = 0
     stream_examples: int = 0
     duplicates_skipped: int = 0   # stream copies of warehouse-trained examples
+    resume_skipped: int = 0       # rows excluded by resume ReplayFilters
     watermark: int = -1           # largest request_id trained from the warehouse
     flipped: bool = False         # reached the live phase
 
@@ -52,6 +83,7 @@ class BackfillCoordinator:
         micro_batch: int = 32,
         start_hour: Optional[int] = None,
         end_hour: Optional[int] = None,
+        resume_filters: Sequence[ReplayFilter] = (),
     ):
         self.warehouse = warehouse
         self.source = source
@@ -63,7 +95,30 @@ class BackfillCoordinator:
             hours[0] if hours else 0)
         self.end_hour = end_hour if end_hour is not None else (
             hours[-1] if hours else self.start_hour - 1)
+        # crash-safe resume: one filter per prior kill, oldest first. Mutable
+        # per-filter prefix counters live here, not in the frozen filters.
+        self._filters: List[List] = [[f, 0] for f in resume_filters]
         self.stats = BackfillStats()
+
+    # -- resume filter chain ---------------------------------------------------
+    def _replay_drops(self, exm: TrainingExample) -> bool:
+        """True iff a prior crash epoch already trained this replay row. Each
+        filter only sees rows that survived the earlier epochs (the chain
+        reproduces each epoch's own input sequence)."""
+        for entry in self._filters:
+            f: ReplayFilter = entry[0]
+            if f.drop_lo < exm.request_id <= f.drop_hi:
+                return True        # trained from the live stream that epoch
+            if entry[1] < f.skip_rows:
+                entry[1] += 1
+                return True        # trained during that epoch's backfill
+        return False
+
+    def _interval_drops(self, request_id: int) -> bool:
+        """Live-phase belt-and-braces: a prior epoch's live-trained id that
+        somehow reappears on the stream must still be dropped exactly-once."""
+        return any(f.drop_lo < request_id <= f.drop_hi
+                   for f, _ in self._filters)
 
     def micro_batches(self) -> Iterator[List[TrainingExample]]:
         st = self.stats
@@ -74,8 +129,13 @@ class BackfillCoordinator:
             for bucket in self.warehouse.iter_bucketed(hour):
                 for exm in bucket:
                     empty = False
+                    # the watermark covers SKIPPED rows too: they trained in a
+                    # prior epoch, so their stream copies must still dedupe
                     if exm.request_id > st.watermark:
                         st.watermark = exm.request_id
+                    if self._replay_drops(exm):
+                        st.resume_skipped += 1
+                        continue
                     st.warehouse_examples += 1
                     buf.append(exm)
                     if len(buf) >= self.micro_batch:
@@ -91,7 +151,8 @@ class BackfillCoordinator:
         for mb in self.source.micro_batches():
             keep: List[TrainingExample] = []
             for exm in mb:
-                if exm.request_id <= st.watermark:
+                if (exm.request_id <= st.watermark
+                        or self._interval_drops(exm.request_id)):
                     st.duplicates_skipped += 1
                     self.source.discard(exm)   # release its lease; it already
                     continue                   # trained from the warehouse

@@ -43,7 +43,7 @@ from repro.dpp.client import RebatchingClient
 from repro.dpp.elastic import DPPWorkerPool, ElasticController
 from repro.dpp.worker import DPPWorker, WorkerPlan
 from repro.storage.stream import TrainingExampleStream, Warehouse
-from repro.streaming.backfill import BackfillCoordinator
+from repro.streaming.backfill import BackfillCoordinator, ReplayFilter
 from repro.streaming.source import MicroBatchConfig, StreamingSource
 
 
@@ -109,7 +109,7 @@ class _AckingWorker:
                     # race, and dropping is always protocol-safe.
                     dropped_all.extend(kept)
                     kept = []
-        self._session._on_item_done(kept, dropped=dropped_all)
+        self._session._on_item_done(kept, dropped=dropped_all, item=examples)
         return out
 
     def _triage(self, examples):
@@ -138,16 +138,26 @@ class StreamingSession:
         buffer_batches: int = 4,
         backfill_from: Optional[Warehouse] = None,
         jagged: bool = True,
+        ordered: bool = False,
+        max_item_retries: int = 0,
+        emit_seq_start: int = 0,
+        resume_filters: Optional[List[ReplayFilter]] = None,
+        backfill_start_hour: Optional[int] = None,
+        backfill_end_hour: Optional[int] = None,
     ):
         self.source = StreamingSource(stream, micro_batch)
         mb = self.source.cfg.max_examples
         self.coordinator = (
-            BackfillCoordinator(backfill_from, self.source, micro_batch=mb)
+            BackfillCoordinator(backfill_from, self.source, micro_batch=mb,
+                                start_hour=backfill_start_hour,
+                                end_hour=backfill_end_hour,
+                                resume_filters=resume_filters or ())
             if backfill_from is not None else None
         )
         self.client = RebatchingClient(full_batch_size,
                                        buffer_batches=buffer_batches,
-                                       shuffle_seed=shuffle_seed)
+                                       shuffle_seed=shuffle_seed,
+                                       emit_seq_start=emit_seq_start)
         self.freshness = FreshnessStats()
         self._pub_q: Deque[float] = collections.deque()
         self._pq_lock = threading.Lock()
@@ -158,10 +168,37 @@ class StreamingSession:
             # per-thread worker factory from it
             plan = make_worker
             make_worker = lambda: DPPWorker.from_plan(plan)  # noqa: E731
+        self.ordered = ordered
+        self._resume_filters = list(resume_filters or [])
+        # placement-order ledger (ordered mode): per PLACED row, its
+        # ``(request_id, coord_pos, is_replay)`` — ``coord_pos`` is the count
+        # of COORDINATOR-emitted rows consumed up to and including this row
+        # (triage-dropped and abandoned rows count as consumed: protocol drops
+        # stay dropped across a resume). Feed.checkpoint maps "rows trained"
+        # to the replay-prefix cursor / live watermark through it; trimmed
+        # lazily at checkpoint time.
+        self._ledger: Deque[tuple] = collections.deque()
+        self._ledger_base = 0          # placement position of _ledger[0]
+        self._coord_consumed = 0       # coordinator rows placed or skipped
+        self._ledger_lock = threading.Lock()
+        # worker-completion-time survivor indices, keyed by work-item id:
+        # _AckingWorker may drop stale examples, and the ledger must record
+        # exactly the rows that were PLACED at their in-item offsets (the
+        # pool's on_place hands back the original item, which stays
+        # referenced until placement)
+        self._kept_by_item: Dict[int, List[tuple]] = {}
+        self.abandoned = 0             # examples dropped by crash recovery
+        # resume bookkeeping only when a checkpoint is actually producible
+        # (ordered + a durable warehouse leg) — a live-only ordered session
+        # must not accrete a ledger nothing ever trims
+        track = ordered and self.coordinator is not None
         self.pool = DPPWorkerPool(
             lambda: _AckingWorker(make_worker(), self),
             self.client, n_workers=n_workers, controller=controller,
-            jagged=jagged,
+            jagged=jagged, ordered=ordered, max_item_retries=max_item_retries,
+            on_place=self._on_place if track else None,
+            on_abandon=self._on_abandon if max_item_retries > 0 else None,
+            on_skip=self._on_skip if track else None,
         )
         self._started = False
         self._joiner: Optional[threading.Thread] = None
@@ -225,7 +262,7 @@ class StreamingSession:
         self.join()
 
     # -- worker-side callbacks ---------------------------------------------------
-    def _on_item_done(self, examples, dropped=()) -> None:
+    def _on_item_done(self, examples, dropped=(), item=None) -> None:
         walls: List[float] = []
         for exm in examples:
             w = self.source.pop_pub_wall(exm.request_id)
@@ -235,11 +272,67 @@ class StreamingSession:
             with self._pq_lock:
                 self._pub_q.extend(walls)
         self.source.ack(examples)
+        if item is not None and self.ordered and self.coordinator is not None:
+            # remember which rows survived triage AND their in-item offsets:
+            # placement happens later (in item order) and the resume cursor
+            # must count triage-dropped rows as consumed coordinator rows
+            kept_ids = {e.request_id for e in examples}
+            self._kept_by_item[id(item)] = [
+                (e.request_id, idx) for idx, e in enumerate(item)
+                if e.request_id in kept_ids]
         if dropped:
             # stale-drop path: release leases + clocks, but contribute no
             # freshness samples (these rows never reach a gradient)
             self.stale_dropped += len(dropped)
             self.source.ack(dropped)
+
+    def _on_place(self, item) -> None:
+        """Pool placer callback (ordered mode): rows of ``item`` just entered
+        the client, in work-item sequence order."""
+        kept = self._kept_by_item.pop(id(item), None)
+        if kept is None:
+            kept = [(e.request_id, idx) for idx, e in enumerate(item)]
+        st = self.coordinator.stats if self.coordinator is not None else None
+        with self._ledger_lock:
+            base = self._coord_consumed
+            # a replay item's rows were counted in warehouse_examples BEFORE
+            # emission (and all replay rows are emitted, hence placed, before
+            # any live row), so this classification cannot race wrong
+            replay = st is not None and base < st.warehouse_examples
+            self._ledger.extend((rid, base + idx + 1, replay)
+                                for rid, idx in kept)
+            self._coord_consumed = base + len(item)
+
+    def _trim_ledger_locked(self, trained_rows: int) -> None:
+        """Drop ledger entries before the LAST trained row (never needed
+        again). Call with ``_ledger_lock`` held."""
+        while self._ledger_base < trained_rows - 1 and self._ledger:
+            self._ledger.popleft()
+            self._ledger_base += 1
+
+    def trim_ledger(self, trained_rows: int) -> None:
+        """Steady-state ledger bound: the owning Feed calls this per trained
+        batch, so ledger size tracks the in-flight window even when the
+        trainer never checkpoints (no ckpt_dir)."""
+        with self._ledger_lock:
+            self._trim_ledger_locked(trained_rows)
+
+    def _on_skip(self, item) -> None:
+        """Pool placer callback for an ABANDONED item reaching its placement
+        turn: its rows consumed coordinator positions without being placed
+        (dropped by protocol — a resume must not shift later rows' cursor)."""
+        with self._ledger_lock:
+            self._coord_consumed += len(item)
+
+    def _on_abandon(self, item, exc) -> None:
+        """Pool crash-recovery callback: an item exhausted its retries. Drop
+        its examples (protocol-safe, like a stale drop) and release their
+        generation leases so a crashed worker can never leak a pinned
+        generation."""
+        self._kept_by_item.pop(id(item), None)
+        self.source.ack(item)
+        self.abandoned += len(item)
+        self.pool.record_lease_recoveries(len(item))
 
     # -- feed protocol (Trainer / DevicePrefetcher face) --------------------------
     @property
@@ -308,6 +401,66 @@ class StreamingSession:
             if b is None:
                 return
             yield b
+
+    # -- crash-safe resume -------------------------------------------------------
+    def checkpoint_state(self, trained_rows: int) -> Dict:
+        """Minimal cursor for exactly-once resume after ``trained_rows`` rows
+        reached a gradient (``Feed.checkpoint`` supplies the count from its
+        delivered/trained FIFO).
+
+        Requires ``ordered`` placement and a backfill coordinator: the
+        warehouse leg of the bifurcated pipeline is the durable replay source,
+        and in-order placement makes "rows trained" identify an exact prefix
+        of (replay order ++ live id order). The returned filter chain is this
+        session's inherited filters plus one new ``ReplayFilter``:
+
+        * ``skip_rows`` — COORDINATOR replay rows covered by training: the
+          coord position of the last trained replay row, counting any
+          triage-dropped / abandoned rows interleaved before it (protocol
+          drops stay dropped across a resume, so they are "covered" too);
+          once a live row has trained, every emitted replay row is covered
+          and ``skip_rows`` is the coordinator's full pre-triage count;
+        * ``(drop_lo, drop_hi]`` — the live-trained request-id interval:
+          ``drop_lo`` is the flip watermark (every kept live id exceeds it),
+          ``drop_hi`` the id of the last trained row, read from the
+          placement-order ledger. Live ids arrive monotonically (request_ids
+          are allocated in arrival order), so the interval is exact."""
+        if not self.ordered:
+            raise ValueError(
+                "streaming checkpoint requires ordered placement "
+                "(StreamingSession(ordered=True) / DatasetSpec.ordered)")
+        if self.coordinator is None:
+            raise ValueError(
+                "streaming checkpoint requires the warehouse backfill leg "
+                "(StreamSource(backfill=True)) — the stream alone is not a "
+                "durable replay source")
+        st = self.coordinator.stats
+        skip = 0
+        lo = hi = -1
+        if trained_rows > 0:
+            with self._ledger_lock:
+                self._trim_ledger_locked(trained_rows)
+                idx = trained_rows - 1 - self._ledger_base
+                if idx < 0 or idx >= len(self._ledger):
+                    raise RuntimeError(
+                        f"placement ledger out of sync: trained_rows="
+                        f"{trained_rows}, base={self._ledger_base}, "
+                        f"len={len(self._ledger)}")
+                last_id, coord_pos, is_replay = self._ledger[idx]
+            if is_replay:
+                skip = coord_pos
+            else:                    # live rows reached a gradient
+                skip = st.warehouse_examples   # final: flip preceded any live
+                lo = st.watermark
+                hi = last_id
+        new = ReplayFilter(skip_rows=skip, drop_lo=lo, drop_hi=hi)
+        return {
+            "filters": [f.to_state() for f in self._resume_filters]
+                       + [new.to_state()],
+            "replay_range": [self.coordinator.start_hour,
+                             self.coordinator.end_hour],
+            "watermark": st.watermark,
+        }
 
     # -- introspection -----------------------------------------------------------
     def merged_worker_stats(self):

@@ -27,7 +27,7 @@ import time
 from typing import Dict, Iterator, List, Optional
 
 from repro.core.versioning import TrainingExample
-from repro.storage.stream import TrainingExampleStream
+from repro.storage.stream import StreamDisconnect, TrainingExampleStream
 
 
 @dataclasses.dataclass
@@ -44,6 +44,7 @@ class SourceStats:
     size_flushes: int = 0
     deadline_flushes: int = 0
     drain_flushes: int = 0
+    reconnects: int = 0               # transient StreamDisconnects healed
     publish_to_drain_s: float = 0.0   # summed over latency_samples
     latency_samples: int = 0
     max_lag: int = 0                  # peak stream backlog observed
@@ -79,7 +80,14 @@ class StreamingSource:
                               max(0.0, deadline - time.perf_counter()))
             else:
                 timeout = cfg.poll_s
-            exm = self.stream.consume(timeout=timeout)
+            try:
+                exm = self.stream.consume(timeout=timeout)
+            except StreamDisconnect:
+                # transient broker failure: the stream retains unacked
+                # messages, so reconnect-and-repoll loses nothing (and the
+                # buffered micro-batch keeps its deadline)
+                self.stats.reconnects += 1
+                continue
             now = time.perf_counter()
             if exm is not None:
                 if not buf:

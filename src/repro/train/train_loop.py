@@ -61,6 +61,12 @@ class Trainer:
                      if cfg.ckpt_dir else None)
         self.history = []
         self._jit_step = jax.jit(self._train_step)
+        # set by fit(): the active Feed whose cursor rides along with model
+        # checkpoints (feed_state sidecar, exactly-once resume). While a feed
+        # is active, run_step defers its periodic autosave to fit — the save
+        # must happen AFTER record_train_step so the feed's trained-row
+        # counter includes the step being checkpointed.
+        self._fit_feed = None
 
     # -- one optimizer step (with optional microbatch accumulation) -----------
     def _train_step(self, params, opt_state, ef_state, microbatches):
@@ -97,7 +103,8 @@ class Trainer:
         self.step += 1
         out = {k: float(v) for k, v in stats.items()}
         self.history.append(out)
-        if self.ckpt and self.step % self.cfg.ckpt_every == 0:
+        if (self.ckpt and self.step % self.cfg.ckpt_every == 0
+                and self._fit_feed is None):
             self.save()
         return out
 
@@ -107,7 +114,12 @@ class Trainer:
         state = {"params": self.params, "opt": self.opt_state}
         if self.ef_state is not None:
             state["ef"] = self.ef_state
-        self.ckpt.save(self.step, state, extra={"step": self.step})
+        feed_state = None
+        feed = self._fit_feed
+        if feed is not None and getattr(feed, "can_checkpoint", False):
+            feed_state = feed.checkpoint()
+        self.ckpt.save(self.step, state, extra={"step": self.step},
+                       feed_state=feed_state)
 
     def try_resume(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_step() is None:
@@ -134,6 +146,7 @@ class Trainer:
             feed = DevicePrefetcher(feed, depth=self.cfg.prefetch_depth)
         # GPU-busy accounting feeds the elastic controller's starvation signal
         record = getattr(feed, "record_train_step", None)
+        self._fit_feed = feed if isinstance(feed, Feed) else None
         t0 = time.perf_counter()
 
         def batches():
@@ -186,6 +199,12 @@ class Trainer:
                 stats = self.run_step(batch)
                 if record is not None:
                     record(time.perf_counter() - ts)
+                if (self.ckpt and self._fit_feed is not None
+                        and self.step % self.cfg.ckpt_every == 0):
+                    # deferred from run_step: the feed's trained-row counter
+                    # advanced in record() above, so the feed_state sidecar
+                    # now names exactly this step's training frontier
+                    self.save()
                 if self.step % self.cfg.log_every == 0:
                     dt = time.perf_counter() - t0
                     print(f"step {self.step:5d} loss={stats['loss']:.4f} "
@@ -197,6 +216,7 @@ class Trainer:
                         and time.perf_counter() - t0 >= self.cfg.max_wall_s):
                     break
         finally:
+            self._fit_feed = None
             # break AND exception paths: release the transfer thread and any
             # queued device batches (idempotent; harmless on exhaustion).
             # A Feed's stop() releases ONLY its device-prefetch stage — the

@@ -1,0 +1,52 @@
+"""Shared test fixtures: the production-sim builders previously copy-pasted
+across test_data.py, test_streaming.py, test_scan_plan.py (and now used by
+test_chaos.py). Importable both as fixtures and directly
+(``from conftest import make_sim``)."""
+import pytest
+
+from repro.core import events as ev
+from repro.core.simulation import ProductionSim, SimConfig
+
+
+def make_sim(users=6, days=2, seed=0, req=3, mode="vlm", pin=False,
+             capture_reference=True, stripe_len=16, events_mean=25.0,
+             n_items=1_500, extra_days=2):
+    """One standard traffic sim: ``days`` full production days of ``users``
+    users at ``req`` requests/user/day (the event stream covers
+    ``days + extra_days`` so later test-driven days have traffic to ingest).
+    ``pin`` enables bifurcated-protocol generation pinning (streaming);
+    ``capture_reference`` keeps the inference-time ground truth for audits."""
+    cfg = SimConfig(
+        stream=ev.StreamConfig(n_users=users, n_items=n_items,
+                               days=days + extra_days,
+                               events_per_user_day_mean=events_mean,
+                               seed=seed),
+        stripe_len=stripe_len,
+        requests_per_user_day=req,
+        mode=mode,
+        seed=seed,
+        pin_generations=pin,
+    )
+    sim = ProductionSim(cfg)
+    if days:
+        sim.run_days(days, capture_reference=capture_reference)
+    return sim
+
+
+def refs_by_id(sim):
+    """request_id -> inference-time ground-truth UIH (streaming audits pair
+    by id: stream consumption interleaves users)."""
+    return {e.request_id: r for e, r in zip(sim.examples, sim.references)}
+
+
+@pytest.fixture(scope="session")
+def sim_factory():
+    return make_sim
+
+
+@pytest.fixture(scope="module")
+def planned_sim():
+    """The heavier module-scoped sim the scan-plan tests share (more users,
+    days, and events so batched plans have real dedupe/fanout structure)."""
+    return make_sim(users=8, days=3, seed=2, req=4, events_mean=40.0,
+                    n_items=1_000, extra_days=1)

@@ -1,0 +1,437 @@
+"""Fault-tolerant data plane (§10): deterministic chaos + exactly-once resume.
+
+Covers the PR's acceptance spine:
+  * seeded fault matrix — for each injectable fault kind × {batch, streaming},
+    the feed completes with BYTE-IDENTICAL batches to the fault-free run
+    (ordered placement + pool self-healing), the trained-example multiset is
+    exact, ``consistency.audit`` stays clean, and zero generation leases leak;
+  * self-healing — >= 2 workers crashed mid-run are requeued + respawned
+    (``worker_restarts``/``items_requeued``/``lease_recoveries`` counters);
+  * kill-and-resume — ``Trainer.fit`` killed at an arbitrary step, restored
+    via ``CheckpointManager`` (model state) + ``open_feed(resume_from=
+    feed_state)`` (data cursor), trains the exact remaining example multiset
+    in both batch and streaming modes (streaming: across the backfill flip);
+  * ``plan_affine`` properties (hypothesis / fallback sweep): single-shard
+    items, exact partition of the input, permutation invariance;
+  * retry exhaustion: a poison item is abandoned through ``on_abandon``
+    (streaming drop semantics) or surfaces as an error (batch).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - environment-dependent
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from conftest import make_sim, refs_by_id
+from repro.core import events as ev
+from repro.core.consistency import audit
+from repro.core.projection import TenantProjection
+from repro.core.versioning import TrainingExample
+from repro.data import DatasetSpec, SimSource, StreamSource, WarehouseSource, open_feed
+from repro.dpp.affinity import plan_affine
+from repro.dpp.featurize import FeatureSpec
+from repro.storage.sharding import shard_of
+from repro.testing import (
+    FaultPlan,
+    FaultSpec,
+    InjectedIOError,
+    WorkerCrash,
+    wrap_sim,
+)
+
+MS_PER_HOUR = 3_600_000
+
+TENANT = TenantProjection(
+    "t", 16, ("core",),
+    traits_per_group={"core": ("timestamp", "item_id", "action_type")})
+FEATURES = FeatureSpec(seq_len=16, uih_traits=("item_id", "action_type"))
+
+
+def _spec(source, **kw):
+    kw.setdefault("batch_size", 8)
+    kw.setdefault("base_batch_size", 4)
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("prefetch_depth", 0)
+    # no cross-batch window cache: every work item then issues at least one
+    # store scan, so the matrix's scan-tick fault schedule is always reached
+    kw.setdefault("window_cache_size", 0)
+    return DatasetSpec(tenant=TENANT, source=source, features=FEATURES, **kw)
+
+
+def _drain(feed):
+    out = list(feed)
+    feed.join()
+    return out
+
+
+def _row_keys(batches):
+    keys = []
+    for b in batches:
+        for i in range(len(b["user_id"])):
+            keys.append((int(b["user_id"][i]), int(b["request_ts"][i]),
+                         int(b["cand_item_id"][i])))
+    return sorted(keys)
+
+
+def _example_keys(examples):
+    return sorted((e.user_id, e.request_ts, e.candidate["item_id"])
+                  for e in examples)
+
+
+def _assert_batches_equal(want, got):
+    assert len(want) == len(got)
+    for k_batch, (x, y) in enumerate(zip(want, got)):
+        assert x.keys() == y.keys()
+        for k in x:
+            np.testing.assert_array_equal(x[k], y[k],
+                                          err_msg=f"batch {k_batch} key {k}")
+
+
+def _audit_clean(sim, pin=False):
+    mat = sim.materializer(validate_checksum=True, pin_generations=pin)
+    report = audit(sim.examples, sim.references, mat, sim.schema, TENANT)
+    assert report.clean, dataclasses.asdict(report)
+    assert report.examples == len(sim.examples)
+
+
+# ---------------------------------------------------------------------------
+# seeded fault matrix: batch mode
+# ---------------------------------------------------------------------------
+
+BATCH_FAULTS = {
+    "worker_crash": [FaultSpec("worker_crash", 1), FaultSpec("worker_crash", 3)],
+    "scan_ioerror": [FaultSpec("scan_ioerror", 0), FaultSpec("scan_ioerror", 4)],
+    "decode_corruption": [FaultSpec("decode_corruption", 2)],
+    "compaction_during_scan": [FaultSpec("compaction_during_scan", 1),
+                               FaultSpec("compaction_during_scan", 3)],
+}
+
+
+@pytest.mark.parametrize("kind", sorted(BATCH_FAULTS))
+def test_batch_fault_matrix_byte_identical_and_audit_clean(kind):
+    sim = make_sim(users=6, days=2, seed=5)
+    spec = _spec(WarehouseSource(), consistency="audit")
+    clean = _drain(open_feed(spec, sim))
+    assert clean and _row_keys(clean) == _example_keys(sim.examples)
+
+    plan = FaultPlan(
+        BATCH_FAULTS[kind],
+        on_compact=lambda: sim.run_compaction(sim.compaction_watermark,
+                                              evict=False))
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    chaos = _drain(feed)
+    assert plan.n_fired == len(BATCH_FAULTS[kind])   # every fault really fired
+    _assert_batches_equal(clean, chaos)
+    st = feed.stats()
+    if kind in ("worker_crash", "scan_ioerror", "decode_corruption"):
+        assert st.workers.worker_restarts >= len(BATCH_FAULTS[kind])
+        assert st.workers.items_requeued >= len(BATCH_FAULTS[kind])
+    _audit_clean(sim)
+
+
+# ---------------------------------------------------------------------------
+# seeded fault matrix: streaming mode (same-seed twin sims: the run consumes
+# the stream, so clean and chaos runs each get their own identical replica)
+# ---------------------------------------------------------------------------
+
+STREAM_FAULTS = dict(BATCH_FAULTS)
+STREAM_FAULTS["stream_disconnect"] = [FaultSpec("stream_disconnect", 1),
+                                      FaultSpec("stream_disconnect", 7)]
+
+
+def _stream_sim(seed=9):
+    sim = make_sim(users=6, days=2, seed=seed, pin=True)
+    sim.stream.close()   # sealed backlog: the feed drains it and ends
+    return sim
+
+
+@pytest.mark.parametrize("kind", sorted(STREAM_FAULTS))
+def test_streaming_fault_matrix_byte_identical_and_audit_clean(kind):
+    spec = _spec(StreamSource(), consistency="audit", generations="pinned")
+    sim_clean = _stream_sim()
+    clean = _drain(open_feed(spec, sim_clean))
+    assert clean and _row_keys(clean) == _example_keys(sim_clean.examples)
+
+    sim = _stream_sim()
+    plan = FaultPlan(
+        STREAM_FAULTS[kind],
+        on_compact=lambda: sim.run_compaction(sim.compaction_watermark,
+                                              evict=False))
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    chaos = _drain(feed)
+    assert plan.n_fired == len(STREAM_FAULTS[kind])
+    _assert_batches_equal(clean, chaos)
+    # zero leaked generation leases after recovery
+    assert sim.stream.pending_leases() == 0
+    assert sim.immutable.leased_generations() == {}
+    if kind == "stream_disconnect":
+        assert feed.session.source.stats.reconnects == 2
+    _audit_clean(sim, pin=True)
+
+
+def test_self_healing_two_worker_crashes_acceptance():
+    """Acceptance: a seeded FaultPlan crashing >= 2 workers mid-run — the feed
+    completes byte-identical to the fault-free run, recovery counters surface
+    the healing, and no GenerationLease leaks."""
+    spec = _spec(StreamSource(), consistency="audit", generations="pinned")
+    clean = _drain(open_feed(spec, _stream_sim()))
+
+    sim = _stream_sim()
+    plan = FaultPlan([FaultSpec("worker_crash", 1), FaultSpec("worker_crash", 3),
+                      FaultSpec("worker_crash", 5)])
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    chaos = _drain(feed)
+    assert plan.n_fired >= 2
+    _assert_batches_equal(clean, chaos)
+    st = feed.stats()
+    assert st.workers.worker_restarts >= 2
+    assert st.workers.items_requeued >= 2
+    assert sim.stream.pending_leases() == 0
+    assert sim.immutable.leased_generations() == {}
+
+
+def test_seeded_fault_plan_reproducible():
+    a = FaultPlan.seeded(7, {"worker_crash": 0.2, "scan_ioerror": 0.1}, 50)
+    b = FaultPlan.seeded(7, {"worker_crash": 0.2, "scan_ioerror": 0.1}, 50)
+    ticks = lambda p: sorted((f.kind, f.at) for k in p._ticks
+                             for f in [FaultSpec(k, t) for t in p._ticks[k]])
+    assert ticks(a) == ticks(b)
+    assert any(a._ticks[k] for k in a._ticks)   # rate 0.1-0.2 over 50: fires
+
+
+# ---------------------------------------------------------------------------
+# retry exhaustion: poison items
+# ---------------------------------------------------------------------------
+
+def test_poison_item_batch_mode_surfaces_error():
+    """An item that fails EVERY retry must kill a batch feed (silently
+    dropping training data is worse), after max_item_retries attempts."""
+    sim = make_sim(users=4, days=1, seed=2, capture_reference=False)
+    # a fault at every scan tick: the first item can never succeed
+    plan = FaultPlan([FaultSpec("scan_ioerror", t) for t in range(64)])
+    spec = _spec(SimSource(), max_item_retries=2, n_workers=1)
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    _drain_ignore = [b for b in feed]  # noqa: F841  (may be empty)
+    with pytest.raises(RuntimeError, match="worker"):
+        feed.join()          # wraps the final InjectedIOError as its cause
+    st = feed.stats()
+    assert st.workers.items_requeued >= spec.max_item_retries
+
+
+def test_poison_item_streaming_abandons_and_releases_leases():
+    """Streaming drop semantics: a poison item is abandoned after its retries,
+    its examples' leases released (lease_recoveries), and the rest of the
+    stream still trains."""
+    sim = _stream_sim(seed=4)
+    first_mb = 4
+    plan = FaultPlan([FaultSpec("worker_crash", t) for t in range(3)])
+    spec = _spec(StreamSource(micro_batch_examples=first_mb),
+                 generations="pinned", max_item_retries=2, n_workers=1)
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    got = _drain(feed)
+    rows = sum(len(b["user_id"]) for b in got)
+    abandoned = feed.session.abandoned
+    assert abandoned == first_mb                  # exactly one item dropped
+    assert rows == len(sim.examples) - abandoned  # the rest trained
+    st = feed.stats()
+    assert st.workers.lease_recoveries == first_mb
+    assert sim.stream.pending_leases() == 0       # crash recovery released them
+    assert sim.immutable.leased_generations() == {}
+
+
+def test_kill_and_resume_with_abandoned_item_before_the_kill():
+    """Regression: the streaming resume cursor is measured in COORDINATOR
+    rows, so rows dropped by protocol (here: an abandoned poison item) before
+    the kill must not shift the skip prefix — later trained rows would be
+    retrained and the dropped rows resurrected. Dropped rows stay dropped;
+    everything else trains exactly once."""
+    sim = _stream_sim(seed=12)
+    first_mb = 4
+    plan = FaultPlan([FaultSpec("worker_crash", t) for t in range(3)])
+    spec = _spec(StreamSource(micro_batch_examples=first_mb),
+                 generations="pinned", max_item_retries=2, n_workers=1)
+    feed = open_feed(spec, wrap_sim(sim, plan))
+    trained = []
+    for _ in range(2):                       # train past the abandoned item
+        b = feed.get(timeout=20.0)
+        assert b is not None
+        trained.append(b)
+        feed.record_train_step(0.001)
+    assert feed.session.abandoned == first_mb
+    state = feed.checkpoint()
+    # the skip prefix covers the abandoned rows: 2 batches of 8 placed rows
+    # plus the 4 dropped coordinator rows interleaved before them
+    assert state["stream"]["filters"][-1]["skip_rows"] == 16 + first_mb
+    feed.close(timeout=30.0)
+
+    feed2 = open_feed(spec, sim, resume_from=state)   # fault-free resume
+    rest = _drain(feed2)
+    got = _row_keys(trained) + _row_keys(rest)
+    want = _example_keys(sim.examples)
+    assert len(got) == len(want) - first_mb   # dropped rows stay dropped...
+    assert len(set(got)) == len(got)          # ...and nothing trained twice
+    assert set(got) <= set(want)
+    assert sim.stream.pending_leases() == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: kill-and-resume (Trainer + CheckpointManager + open_feed)
+# ---------------------------------------------------------------------------
+
+def _loss_and_params():
+    import jax.numpy as jnp
+
+    def loss_fn(params, b):
+        score = jnp.sum(b["uih_item_id"] * params["w"], axis=1)
+        return jnp.mean((score - b["label_click"]) ** 2)
+
+    return loss_fn, {"w": jnp.zeros((16,), jnp.float32)}
+
+
+def _fit_recording(trainer, feed_args, max_steps=None):
+    """Run Trainer.fit over an open_feed(*feed_args) feed, recording every
+    DELIVERED batch via prep_fn. With prefetch_depth=0 the trainer trains each
+    batch immediately after pulling it, so the recording equals the trained
+    sequence."""
+    recorded = []
+    feed = open_feed(*feed_args[:-1], prep_fn=lambda b: (recorded.append(b), b)[1],
+                     **feed_args[-1])
+    trainer.fit(feed, max_steps=max_steps)
+    return feed, recorded
+
+
+def test_kill_and_resume_batch_exactly_once(tmp_path):
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    sim = make_sim(users=6, days=2, seed=6, capture_reference=False)
+    spec = _spec(WarehouseSource(), reshuffle_seed=3)
+    uninterrupted = _drain(open_feed(spec, sim))
+    total_rows = sum(len(b["user_id"]) for b in uninterrupted)
+    n_batches = len(uninterrupted)
+    assert n_batches >= 4
+
+    loss_fn, params = _loss_and_params()
+    cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2, log_every=10**6)
+    t1 = Trainer(loss_fn, params, cfg)
+    kill_at = n_batches - 2            # an arbitrary mid-run step
+    feed1, run1 = _fit_recording(t1, (spec, sim, {}), max_steps=kill_at)
+    assert t1.step == kill_at
+    feed1.close(timeout=30.0)          # "kill": prefetched work is discarded
+
+    # restart: model from CheckpointManager, data cursor from the sidecar
+    t2 = Trainer(loss_fn, params, cfg)
+    assert t2.try_resume()
+    restored_step = t2.step
+    assert 0 < restored_step <= kill_at
+    feed_state = t2.ckpt.feed_state(restored_step)
+    assert feed_state is not None
+    assert feed_state["trained_batches"] == restored_step
+    assert "warehouse" in feed_state    # hour + intra-hour offset cursor
+    feed2, run2 = _fit_recording(t2, (spec, sim, {"resume_from": feed_state}))
+    feed2.close(timeout=30.0)
+
+    # exactly-once: steps up to the restored checkpoint + the resumed run are
+    # byte-identical to the uninterrupted run — nothing trained twice (beyond
+    # the discarded post-checkpoint steps a kill always loses), none skipped
+    replay = run1[:restored_step] + run2
+    _assert_batches_equal(uninterrupted, replay)
+    assert sum(len(b["user_id"]) for b in replay) == total_rows
+
+
+def test_kill_and_resume_streaming_exactly_once_across_flip(tmp_path):
+    """Streaming acceptance: kill AFTER the backfill->live flip; the resumed
+    feed re-replays the (now longer) warehouse sweep with the checkpoint's
+    ReplayFilter chain — replay prefix skipped, live-trained id interval
+    dropped — and trains exactly the remaining multiset."""
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    sim = make_sim(users=6, days=2, seed=8, pin=True)   # days 0-1 sealed
+    h1 = max(e.request_ts // MS_PER_HOUR for e in sim.examples)
+    sim.run_day(2, capture_reference=True)   # day-2: live leg + warehouse
+    sim.stream.close()
+    day01_rows = sum(1 for e in sim.examples
+                     if e.request_ts // MS_PER_HOUR <= h1)
+
+    # run 1 replays only the sealed hours; day-2 examples arrive LIVE
+    spec1 = _spec(StreamSource(backfill_end_hour=h1), generations="pinned",
+                  reshuffle_seed=3)
+    loss_fn, params = _loss_and_params()
+    cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2, log_every=10**6)
+    t1 = Trainer(loss_fn, params, cfg)
+    kill_at = day01_rows // spec1.batch_size + 2   # crosses into the live phase
+    feed1, run1 = _fit_recording(t1, (spec1, sim, {}), max_steps=kill_at)
+    assert t1.step == kill_at
+    feed1.close(timeout=30.0)
+
+    t2 = Trainer(loss_fn, params, cfg)
+    assert t2.try_resume()
+    feed_state = t2.ckpt.feed_state(t2.step)
+    assert feed_state is not None
+    filt = feed_state["stream"]["filters"][-1]
+    assert filt["skip_rows"] == day01_rows        # replay prefix fully trained
+    assert filt["drop_hi"] > filt["drop_lo"] >= 0  # live interval is non-empty
+
+    # restart replays the FULL warehouse (head moved past h1): consumed-but-
+    # untrained live rows are recovered from the warehouse leg
+    spec2 = _spec(StreamSource(), generations="pinned", reshuffle_seed=3)
+    feed2, run2 = _fit_recording(t2, (spec2, sim,
+                                      {"resume_from": feed_state}))
+    feed2.close(timeout=30.0)
+
+    trained = _row_keys(run1[:t2.step]) + _row_keys(run2)
+    assert sorted(trained) == _example_keys(sim.examples)   # exactly once
+    assert sim.stream.pending_leases() == 0
+    mat = sim.materializer(validate_checksum=True, pin_generations=True)
+    report = audit(sim.examples, sim.references, mat, sim.schema, TENANT)
+    assert report.clean
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan_affine properties (hypothesis / fallback sweep)
+# ---------------------------------------------------------------------------
+
+def _mk_examples(n, n_users, seed):
+    rng = np.random.default_rng(seed)
+    return [
+        TrainingExample(
+            request_id=i,
+            user_id=int(rng.integers(0, n_users)),
+            request_ts=int(rng.integers(0, 10_000)),
+            label_ts=0, candidate={"item_id": 0}, labels={"click": 0.0},
+        )
+        for i in range(n)
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=0, max_value=60),
+       n_users=st.integers(min_value=1, max_value=12),
+       n_shards=st.sampled_from([1, 2, 4, 8]),
+       base=st.integers(min_value=1, max_value=9),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_plan_affine_properties(n, n_users, n_shards, base, seed):
+    examples = _mk_examples(n, n_users, seed)
+    plan = plan_affine(examples, n_shards, base)
+
+    # 1) every item targets exactly ONE shard (symmetric sharding, §4.2.3)
+    for item in plan.items:
+        assert item
+        assert len({shard_of(e.user_id, n_shards) for e in item}) == 1
+        assert len(item) <= base
+    if plan.items:
+        assert plan.expected_fanout == 1.0
+
+    # 2) the items partition the input: every example exactly once
+    got = sorted(e.request_id for item in plan.items for e in item)
+    assert got == sorted(e.request_id for e in examples)
+
+    # 3) invariant under input permutation (total-order sort key)
+    rng = np.random.default_rng(seed + 1)
+    shuffled = [examples[i] for i in rng.permutation(len(examples))]
+    plan2 = plan_affine(shuffled, n_shards, base)
+    assert [[e.request_id for e in item] for item in plan.items] == \
+           [[e.request_id for e in item] for item in plan2.items]

@@ -39,22 +39,16 @@ from repro.data import (
 from repro.dpp.featurize import FeatureSpec
 from repro.storage.immutable_store import ScanRequest
 
+from conftest import make_sim
+
 SCHEMA = ev.default_schema()
 
 
 def _sim(users=6, days=2, seed=0, req=3, pin=True):
-    cfg = SimConfig(
-        stream=ev.StreamConfig(n_users=users, n_items=1_500, days=days + 2,
-                               events_per_user_day_mean=25.0, seed=seed),
-        stripe_len=16,
-        requests_per_user_day=req,
-        seed=seed,
-        pin_generations=pin,
-    )
-    sim = ProductionSim(cfg)
-    if days:
-        sim.run_days(days, capture_reference=False)
-    return sim
+    # shared fixture builder (tests/conftest.py); this file never audits, so
+    # references are skipped
+    return make_sim(users=users, days=days, seed=seed, req=req, pin=pin,
+                    capture_reference=False)
 
 
 # ---------------------------------------------------------------------------

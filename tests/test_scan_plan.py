@@ -8,7 +8,6 @@ from repro.core import events as ev
 from repro.core.consistency import audit, batches_equal
 from repro.core.materialize import Materializer
 from repro.core.projection import TenantProjection, table1_tenants
-from repro.core.simulation import ProductionSim, SimConfig
 from repro.storage import columnar
 from repro.storage.immutable_store import ImmutableUIHStore, ScanRequest
 
@@ -16,18 +15,9 @@ SCHEMA = ev.default_schema()
 
 
 @pytest.fixture(scope="module")
-def sim():
-    cfg = SimConfig(
-        stream=ev.StreamConfig(n_users=8, n_items=1_000, days=4,
-                               events_per_user_day_mean=40.0, seed=2),
-        stripe_len=16,
-        requests_per_user_day=4,
-        mode="vlm",
-        seed=2,
-    )
-    s = ProductionSim(cfg)
-    s.run_days(3)
-    return s
+def sim(planned_sim):
+    # the shared module-scoped heavy sim (tests/conftest.py)
+    return planned_sim
 
 
 PROJ = TenantProjection("t", seq_len=64, feature_groups=("core",),

@@ -21,7 +21,6 @@ from repro.core import events as ev
 from repro.core.consistency import audit, audit_streaming
 from repro.core.materialize import ChecksumMismatch, Materializer, StaleGeneration
 from repro.core.projection import TenantProjection
-from repro.core.simulation import ProductionSim, SimConfig
 from repro.dpp.featurize import FeatureSpec
 from repro.dpp.worker import DPPWorker
 from repro.storage.compaction import make_scrub
@@ -41,24 +40,14 @@ from repro.streaming import (
 )
 
 
+from conftest import make_sim, refs_by_id as _refs_by_id
+
+
 def _sim(users=6, days=2, seed=0, req=3, mode="vlm"):
-    cfg = SimConfig(
-        stream=ev.StreamConfig(n_users=users, n_items=1_500, days=days + 2,
-                               events_per_user_day_mean=25.0, seed=seed),
-        stripe_len=16,
-        requests_per_user_day=req,
-        mode=mode,
-        seed=seed,
-        pin_generations=True,
-    )
-    sim = ProductionSim(cfg)
-    if days:
-        sim.run_days(days)
-    return sim
-
-
-def _refs_by_id(sim):
-    return {e.request_id: r for e, r in zip(sim.examples, sim.references)}
+    # shared fixture builder (tests/conftest.py), always generation-pinned:
+    # this file exercises the bifurcated streaming protocol
+    return make_sim(users=users, days=days, seed=seed, req=req, mode=mode,
+                    pin=True)
 
 
 # ---------------------------------------------------------------------------

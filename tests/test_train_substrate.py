@@ -113,6 +113,65 @@ def test_checkpoint_ignores_partial_tmp(tmp_path):
     assert mgr.latest_step() == 1
 
 
+def test_checkpoint_restore_skips_leftover_tmp(tmp_path):
+    """A crash mid-save leaves tmp.step_N behind: restore (not just
+    latest_step) must resume from the newest COMPLETE checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"a": jnp.arange(4, dtype=jnp.float32)}
+    mgr.save(1, state)
+    tmp = tmp_path / "tmp.step_000000002"
+    tmp.mkdir()
+    (tmp / "meta.json").write_text("{}")   # even a meta-bearing tmp is skipped
+    assert mgr.latest_step() == 1
+    restored, step, _ = mgr.restore(state)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]))
+
+
+def test_checkpoint_corrupt_latest_falls_back_to_previous(tmp_path):
+    """A bit-flipped leaf in the NEWEST checkpoint fails the checksum;
+    restore-from-latest falls back to the previous complete checkpoint. An
+    explicitly requested step never falls back."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"a": jnp.arange(100, dtype=jnp.float32)})
+    mgr.save(2, {"a": jnp.arange(100, dtype=jnp.float32) * 2})
+    f = tmp_path / "step_000000002" / "arrays.npz"
+    data = bytearray(f.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    f.write_bytes(bytes(data))
+    template = {"a": jnp.zeros(100)}
+    restored, step, _ = mgr.restore(template)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(100, dtype=np.float32))
+    with pytest.raises(Exception):
+        mgr.restore(template, step=2)   # named step: no silent fallback
+
+
+def test_checkpoint_gc_never_removes_newest(tmp_path):
+    state = {"a": jnp.zeros(4)}
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    for s in [1, 2, 3]:
+        mgr.save(s, state)
+        assert mgr.all_steps() == [s]   # newest survives every GC pass
+    mgr0 = CheckpointManager(str(tmp_path / "nogc"), keep=0)
+    for s in [1, 2]:
+        mgr0.save(s, state)
+    assert mgr0.all_steps() == [1, 2]   # keep=0 disables GC entirely
+
+
+def test_checkpoint_feed_state_sidecar_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.zeros(4)}
+    mgr.save(3, state, feed_state={"kind": "batch", "trained_rows": 24})
+    mgr.save(5, state)   # no sidecar on this one
+    assert mgr.feed_state(3) == {"kind": "batch", "trained_rows": 24}
+    assert mgr.feed_state(5) is None
+    assert mgr.feed_state() is None      # latest (5) has no sidecar
+    assert CheckpointManager(str(tmp_path)).feed_state(3) is not None
+
+
 def test_elastic_reshard_to_new_mesh(tmp_path):
     """Save under one sharding, restore under a different mesh layout."""
     from jax.sharding import NamedSharding, PartitionSpec as P
