@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_rebatch",
     "benchmarks.bench_feed",
     "benchmarks.bench_multitenant",
+    "benchmarks.bench_sharded_store",
     "benchmarks.bench_streaming",
     "benchmarks.bench_chaos",
     "benchmarks.bench_kernels",

@@ -56,10 +56,10 @@ from repro.core.projection import TenantProjection, project_view
 from repro.core.versioning import TrainingExample, window_checksum
 from repro.storage.immutable_store import (
     GenerationUnavailable,
-    ImmutableUIHStore,
     IOStats,
     ScanRequest,
 )
+from repro.storage.protocol import StoreProtocol
 
 
 def _projection_fingerprint(projection: Optional[TenantProjection]):
@@ -132,7 +132,7 @@ class MaterializeStats:
 class Materializer:
     def __init__(
         self,
-        immutable: ImmutableUIHStore,
+        immutable: StoreProtocol,
         schema: ev.TraitSchema,
         validate_checksum: bool = False,
         strict: bool = True,

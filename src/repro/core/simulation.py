@@ -33,6 +33,8 @@ from repro.core.versioning import TrainingExample
 from repro.storage.compaction import CompactionConfig, CompactionPipeline, ScrubFn
 from repro.storage.immutable_store import ImmutableUIHStore
 from repro.storage.mutable_store import MutableUIHStore
+from repro.storage.protocol import StoreProtocol
+from repro.storage.sharded_store import ShardedUIHStore
 from repro.storage.stream import TrainingExampleStream, Warehouse
 
 
@@ -52,6 +54,11 @@ class SimConfig:
     # workloads never ack, so pinning would retain one superseded generation
     # per compaction cycle for the whole run.
     pin_generations: bool = False
+    # Disaggregated immutable tier: 0 = in-process monolith (the default every
+    # existing scenario runs on); N>0 = ShardedUIHStore client over N store
+    # nodes with length-aware heavy-tail placement (DESIGN.md §11).
+    n_store_nodes: int = 0
+    placement_policy: str = "length_aware"  # "length_aware" | "hash"
 
 
 class ProductionSim:
@@ -60,7 +67,14 @@ class ProductionSim:
         self.schema = schema or ev.default_schema()
         self.events = ev.SyntheticEventStream(cfg.stream, self.schema)
         self.mutable = MutableUIHStore(self.schema)
-        self.immutable = ImmutableUIHStore(self.schema, n_shards=cfg.n_shards)
+        if cfg.n_store_nodes > 0:
+            self.immutable: StoreProtocol = ShardedUIHStore(
+                self.schema, n_shards=cfg.n_shards,
+                n_nodes=cfg.n_store_nodes,
+                placement_policy=cfg.placement_policy)
+        else:
+            self.immutable = ImmutableUIHStore(
+                self.schema, n_shards=cfg.n_shards)
         self.compactor = CompactionPipeline(
             self.schema,
             CompactionConfig(stripe_len=cfg.stripe_len, lookback_ms=cfg.lookback_ms),

@@ -20,7 +20,8 @@ from typing import Dict, Optional
 
 from repro.core import events as ev
 from repro.core.versioning import TrainingExample, VersionMetadata, window_checksum
-from repro.storage.immutable_store import ImmutableUIHStore, ScanRequest
+from repro.storage.immutable_store import ScanRequest
+from repro.storage.protocol import StoreProtocol
 from repro.storage.mutable_store import MutableUIHStore
 
 
@@ -36,7 +37,7 @@ class BaseSnapshotter:
     def __init__(
         self,
         mutable: MutableUIHStore,
-        immutable: ImmutableUIHStore,
+        immutable: StoreProtocol,
         schema: ev.TraitSchema,
         cfg: Optional[SnapshotterConfig] = None,
     ):

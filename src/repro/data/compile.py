@@ -75,14 +75,17 @@ def _batch_items(spec: DatasetSpec, sim: Any) -> List[list]:
     examples = list(sim.examples)
     if not examples:
         return []
-    n_shards = sim.immutable.router.n_shards
+    n_shards = sim.immutable.n_shards
+    # honor the live generation's placement map (heavy-tail overrides): with a
+    # sharded store, work items then stay NODE-local, not just shard-local
+    placement = sim.immutable.live_placement()
     rng = np.random.default_rng(spec.reshuffle_seed or 0)
     items = []
     rows, epoch_i = 0, 0
     while True:
         epoch = ([examples[i] for i in rng.permutation(len(examples))]
                  if src.shuffle else list(examples))
-        items.extend(plan_affine(epoch, n_shards, bb).items)
+        items.extend(plan_affine(epoch, n_shards, bb, placement=placement).items)
         rows += len(epoch)
         epoch_i += 1
         if src.min_rows is not None:

@@ -23,6 +23,8 @@ from repro.core import events as ev
 from repro.core.materialize import Materializer, TenantShareStats
 from repro.core.projection import TenantProjection
 from repro.data.spec import DatasetSpec
+from repro.dpp.affinity import AffinityPlan, plan_affine
+from repro.storage.protocol import StoreProtocol
 
 
 class MultiTenantPlanner:
@@ -37,7 +39,7 @@ class MultiTenantPlanner:
     def __init__(
         self,
         specs: Sequence[Union[DatasetSpec, TenantProjection]],
-        store: Any,
+        store: StoreProtocol,
         schema: ev.TraitSchema,
         *,
         window_cache_size: int = 0,
@@ -61,6 +63,7 @@ class MultiTenantPlanner:
         pin = ds[0].pin_generations if ds else False
         self.tenants = tenants
         self.schema = schema
+        self.store = store
         self.union = (tenants[0] if len(tenants) == 1
                       else TenantProjection.union(tenants, schema))
         self.materializer = Materializer(
@@ -79,6 +82,18 @@ class MultiTenantPlanner:
         return self.materializer.materialize_multi(
             examples, self.tenants, share_stats=self.share_stats,
             union=self.union)
+
+    # -- work planning ---------------------------------------------------------
+    def plan_items(
+        self, examples: Sequence[Any], base_batch_size: int
+    ) -> AffinityPlan:
+        """Affinity-plan a co-scanned epoch against THIS planner's store:
+        items are clustered by the store's routing — shard on the monolith,
+        (node, shard) under the live placement map on the sharded store — so
+        every co-scan work item stays node-local (zero cross-node fanout)."""
+        return plan_affine(
+            examples, self.store.n_shards, base_batch_size,
+            placement=self.store.live_placement())
 
     # -- introspection ---------------------------------------------------------
     @property

@@ -7,15 +7,21 @@ Two complementary strategies:
   2. symmetric sharding: the warehouse bucket key equals the immutable store's
      partition key, so a bucket's lookups hit exactly one shard (zero fanout).
 
-This module plans DPP work assignments honoring both.
+This module plans DPP work assignments honoring both. With the immutable tier
+disaggregated (``storage.sharded_store``), the plan additionally honors the
+generation's **placement map**: items are clustered by the (node, shard) the
+store will actually route to — including the heavy-tail overrides that move
+ultra-long users off their hash node — so every work item's lookups land on
+exactly one store NODE (zero cross-node network fanout), not just one logical
+shard.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.versioning import TrainingExample
-from repro.storage.sharding import shard_of
+from repro.storage.sharding import PlacementMap, shard_of
 
 
 @dataclasses.dataclass
@@ -24,42 +30,59 @@ class AffinityPlan:
     items: List[List[TrainingExample]]
     expected_fanout: float            # avg distinct shards per item
     amortizable_pairs: int            # adjacent same-(user,window) example pairs
+    expected_node_fanout: float = 1.0  # avg distinct store NODES per item
+
+
+def _tag_of(
+    e: TrainingExample, n_shards: int, placement: Optional[PlacementMap]
+) -> Tuple[int, int]:
+    """(node, shard) routing tag — computed ONCE per example and threaded
+    through sort, cut and fanout accounting. Without a placement map the node
+    is a constant 0, so the monolith plan (and its item order) is unchanged."""
+    shard = shard_of(e.user_id, n_shards)
+    node = placement.node_of(e.user_id) if placement is not None else 0
+    return (node, shard)
 
 
 def plan_affine(
     examples: Sequence[TrainingExample],
     n_shards: int,
     base_batch_size: int,
+    placement: Optional[PlacementMap] = None,
 ) -> AffinityPlan:
-    """User-clustered plan: sort by (shard, user, request_ts, request_id) —
-    a TOTAL order, so the plan is invariant under input permutation — and cut
-    into base batches at shard boundaries. All lookups in an item target
-    exactly ONE shard (zero cross-shard fanout, the §4.2.3 symmetric-sharding
-    goal); same-user adjacency maximizes window-cache hits."""
-    order = sorted(
-        examples,
-        key=lambda e: (shard_of(e.user_id, n_shards), e.user_id, e.request_ts,
-                       e.request_id),
-    )
+    """User-clustered plan: sort by (node, shard, user, request_ts,
+    request_id) — a TOTAL order, so the plan is invariant under input
+    permutation — and cut into base batches at (node, shard) boundaries. All
+    lookups in an item target exactly ONE shard on ONE store node (zero
+    cross-node fanout, the §4.2.3 symmetric-sharding goal); same-user
+    adjacency maximizes window-cache hits."""
+    tagged = [(_tag_of(e, n_shards, placement), e) for e in examples]
+    tagged.sort(key=lambda te: (te[0], te[1].user_id, te[1].request_ts,
+                                te[1].request_id))
     items: List[List[TrainingExample]] = []
+    tags: List[List[Tuple[int, int]]] = []
     run: List[TrainingExample] = []
-    run_shard = None
-    for e in order:
-        shard = shard_of(e.user_id, n_shards)
-        if run and (shard != run_shard or len(run) >= base_batch_size):
+    run_tags: List[Tuple[int, int]] = []
+    run_tag = None
+    for tag, e in tagged:
+        if run and (tag != run_tag or len(run) >= base_batch_size):
             items.append(run)
-            run = []
-        run_shard = shard
+            tags.append(run_tags)
+            run, run_tags = [], []
+        run_tag = tag
         run.append(e)
+        run_tags.append(tag)
     if run:
         items.append(run)
-    return _plan(items, n_shards)
+        tags.append(run_tags)
+    return _plan(items, tags)
 
 
 def plan_arrival_order(
     examples: Sequence[TrainingExample],
     n_shards: int,
     base_batch_size: int,
+    placement: Optional[PlacementMap] = None,
 ) -> AffinityPlan:
     """Baseline plan: arrival order (no clustering) — what a Fat-Row-era
     pipeline does; used as the benchmark control."""
@@ -68,14 +91,20 @@ def plan_arrival_order(
         order[i : i + base_batch_size]
         for i in range(0, len(order), base_batch_size)
     ]
-    return _plan(items, n_shards)
+    tags = [[_tag_of(e, n_shards, placement) for e in item] for item in items]
+    return _plan(items, tags)
 
 
-def _plan(items: List[List[TrainingExample]], n_shards: int) -> AffinityPlan:
+def _plan(
+    items: List[List[TrainingExample]],
+    tags: List[List[Tuple[int, int]]],
+) -> AffinityPlan:
     fanouts = []
+    node_fanouts = []
     amortizable = 0
-    for item in items:
-        fanouts.append(len({shard_of(e.user_id, n_shards) for e in item}))
+    for item, item_tags in zip(items, tags):
+        fanouts.append(len({t[1] for t in item_tags}))
+        node_fanouts.append(len({t[0] for t in item_tags}))
         for a, b in zip(item, item[1:]):
             same_window = (
                 not a.is_fat
@@ -91,4 +120,5 @@ def _plan(items: List[List[TrainingExample]], n_shards: int) -> AffinityPlan:
         items=items,
         expected_fanout=sum(fanouts) / max(len(fanouts), 1),
         amortizable_pairs=amortizable,
+        expected_node_fanout=sum(node_fanouts) / max(len(node_fanouts), 1),
     )

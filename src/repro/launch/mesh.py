@@ -29,3 +29,16 @@ def make_test_mesh(n_devices: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over however many local devices exist (CPU tests)."""
     n = min(n_devices, jax.device_count())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def store_node_of_host(host: int, n_hosts: int, n_store_nodes: int) -> int:
+    """Which store node a trainer host's DPP workers treat as *local*.
+
+    The disaggregated immutable tier (``storage.sharded_store``) is deployed
+    alongside the trainer mesh; hosts map onto store nodes round-robin so
+    each node serves ``ceil(n_hosts / n_store_nodes)`` hosts and a host's
+    affinity-planned work items (already node-local via the placement map)
+    can be routed to the co-located node's feed partition."""
+    if not 0 <= host < n_hosts:
+        raise ValueError(f"host {host} out of range [0, {n_hosts})")
+    return host % n_store_nodes

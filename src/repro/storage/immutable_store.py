@@ -177,11 +177,14 @@ class ScanPlan:
     wider result (tail-slice to the narrower sequence budget + trait
     projection). ``shard_groups`` only dispatches the covering requests;
     ``derived`` maps each subsumed unique index to its covering unique index.
+
+    The grouping key is the executor's concurrency domain: the monolith keys
+    by shard, the disaggregated ``ShardedUIHStore`` keys by store node.
     """
 
     unique: List[ScanRequest]          # deduped requests, first-seen order
     assignment: List[int]              # original request idx -> unique idx
-    shard_groups: Dict[int, List[int]]  # shard -> indices into ``unique``
+    shard_groups: Dict[int, List[int]]  # shard/node -> indices into ``unique``
     derived: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
@@ -195,6 +198,62 @@ class ScanPlan:
     @property
     def fanout(self) -> int:
         return len(self.shard_groups)
+
+
+def build_scan_plan(reqs, route, effective_traits) -> ScanPlan:
+    """Shared planner behind every store implementation's ``plan()``:
+    dedupe identical requests, subsume projection-contained ones
+    (union-projection planning), group the surviving roots by ``route(req)``
+    — the executor's concurrency domain (shard for the monolith, node for
+    the sharded client).
+
+    ``effective_traits(req)`` resolves a request's trait set (None = the
+    group's full schema) so subsumption compares real column sets."""
+    index: Dict[ScanRequest, int] = {}
+    unique: List[ScanRequest] = []
+    assignment: List[int] = []
+    by_window: Dict[tuple, List[int]] = {}
+    for r in reqs:
+        j = index.get(r)
+        if j is None:
+            j = index[r] = len(unique)
+            unique.append(r)
+            by_window.setdefault(
+                (r.user_id, r.group, r.start_ts, r.end_ts, r.generation),
+                []).append(j)
+        assignment.append(j)
+
+    derived: Dict[int, int] = {}
+    inf = float("inf")
+    for js in by_window.values():
+        if len(js) < 2:
+            continue
+        info = {
+            j: (unique[j].max_events if unique[j].max_events >= 0 else inf,
+                frozenset(effective_traits(unique[j])))
+            for j in js
+        }
+        # widest first: a later (narrower) request can only be covered by
+        # an already-accepted root
+        roots: List[int] = []
+        for j in sorted(js, key=lambda j: (info[j][0], len(info[j][1])),
+                        reverse=True):
+            me_j, tr_j = info[j]
+            cover = next(
+                (k for k in roots
+                 if info[k][0] >= me_j and info[k][1] >= tr_j), None)
+            if cover is None:
+                roots.append(j)
+            else:
+                derived[j] = cover
+
+    shard_groups: Dict[int, List[int]] = {}
+    for j, r in enumerate(unique):
+        if j in derived:
+            continue
+        shard_groups.setdefault(route(r), []).append(j)
+    return ScanPlan(unique=unique, assignment=assignment,
+                    shard_groups=shard_groups, derived=derived)
 
 
 class ImmutableUIHStore:
@@ -446,51 +505,9 @@ class ImmutableUIHStore:
         *derived* — the executor serves it by carving the wider result instead
         of scanning (``IOStats.subsumed_hits``). This is what lets N tenant
         projections over the same window cost ONE storage scan."""
-        index: Dict[ScanRequest, int] = {}
-        unique: List[ScanRequest] = []
-        assignment: List[int] = []
-        by_window: Dict[tuple, List[int]] = {}
-        for r in reqs:
-            j = index.get(r)
-            if j is None:
-                j = index[r] = len(unique)
-                unique.append(r)
-                by_window.setdefault(
-                    (r.user_id, r.group, r.start_ts, r.end_ts, r.generation),
-                    []).append(j)
-            assignment.append(j)
-
-        derived: Dict[int, int] = {}
-        inf = float("inf")
-        for js in by_window.values():
-            if len(js) < 2:
-                continue
-            info = {
-                j: (unique[j].max_events if unique[j].max_events >= 0 else inf,
-                    frozenset(self._effective_traits(unique[j])))
-                for j in js
-            }
-            # widest first: a later (narrower) request can only be covered by
-            # an already-accepted root
-            roots: List[int] = []
-            for j in sorted(js, key=lambda j: (info[j][0], len(info[j][1])),
-                            reverse=True):
-                me_j, tr_j = info[j]
-                cover = next(
-                    (k for k in roots
-                     if info[k][0] >= me_j and info[k][1] >= tr_j), None)
-                if cover is None:
-                    roots.append(j)
-                else:
-                    derived[j] = cover
-
-        shard_groups: Dict[int, List[int]] = {}
-        for j, r in enumerate(unique):
-            if j in derived:
-                continue
-            shard_groups.setdefault(self.router.route(r.user_id), []).append(j)
-        return ScanPlan(unique=unique, assignment=assignment,
-                        shard_groups=shard_groups, derived=derived)
+        return build_scan_plan(
+            reqs, lambda r: self.router.route(r.user_id),
+            self._effective_traits)
 
     def _carve(self, req: ScanRequest, wide: ev.EventBatch) -> ev.EventBatch:
         """Serve a subsumed request from its covering request's result:
@@ -570,6 +587,12 @@ class ImmutableUIHStore:
         return self.execute_plan(self.plan(reqs), out_stats)
 
     # -- introspection ---------------------------------------------------------
+    def live_placement(self):
+        """User -> node placement of the live generation. The monolith has no
+        node topology — every consumer treating ``None`` as "single node"
+        (e.g. ``plan_affine``) behaves exactly as before disaggregation."""
+        return None
+
     def fanout(self, reqs: Sequence[ScanRequest]) -> int:
         return len({self.router.route(r.user_id) for r in reqs})
 

@@ -1,0 +1,108 @@
+"""The storage-tier contract every consumer speaks (§4.2.3, DESIGN.md §11).
+
+``core.materialize``, ``core.snapshot``, ``data.planner``, ``data.compile``
+and ``dpp.affinity`` are all written against this surface, never against a
+concrete store class — the in-process monolith (``ImmutableUIHStore``) and
+the disaggregated multi-node client (``ShardedUIHStore``) are drop-in
+interchangeable. The contract is behavioral, not just structural:
+
+  * ``plan``/``execute_plan``/``multi_range_scan`` — batched reads are
+    planned (dedupe + union-projection subsumption) and executed with the
+    implementation's parallelism (shard threads / node fanout); results come
+    back in original request order and the call's ``IOStats`` delta lands in
+    the caller's ``out_stats``.
+  * ``acquire_lease`` — pins ONE consistent generation for the holder: on the
+    sharded store this is an epoch barrier (every node pins the same
+    generation; a bulk load can never interleave with lease acquisition).
+  * ``bulk_load`` — installs a generation atomically with respect to leases:
+    a leased generation id is never reused, a superseded-but-leased
+    generation is retained until its last release.
+  * ``StaleGeneration`` remediation contract: scanning a generation that is
+    neither live nor retained raises ``GenerationUnavailable`` (a
+    ``KeyError``) so the Materializer's layered remediation works unchanged.
+"""
+from __future__ import annotations
+
+from typing import (
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    runtime_checkable,
+)
+
+from repro.core import events as ev
+from repro.storage.immutable_store import IOStats, ScanPlan, ScanRequest
+from repro.storage.sharding import PlacementMap
+
+
+@runtime_checkable
+class LeaseProtocol(Protocol):
+    """A refcounted pin on one immutable generation (context-manager
+    friendly; ``release`` is idempotent)."""
+
+    generation: int
+
+    def release(self) -> None: ...
+
+    def __enter__(self) -> "LeaseProtocol": ...
+
+    def __exit__(self, *exc) -> None: ...
+
+
+@runtime_checkable
+class StoreProtocol(Protocol):
+    """The immutable-tier surface (monolith and sharded client both satisfy
+    it). Attributes are part of the contract: consumers read ``schema`` for
+    trait resolution, ``generation`` for staleness decisions, ``n_shards``
+    for symmetric data placement, and ``stats`` for I/O accounting."""
+
+    schema: ev.TraitSchema
+    n_shards: int
+    generation: int
+    stats: IOStats
+
+    # -- write path ----------------------------------------------------------
+    def bulk_load(self, tables, generation: int) -> None: ...
+
+    # -- read path -----------------------------------------------------------
+    def scan(self, req: ScanRequest) -> ev.EventBatch: ...
+
+    def plan(self, reqs: Sequence[ScanRequest]) -> ScanPlan: ...
+
+    def execute_plan(
+        self, plan: ScanPlan, out_stats: Optional[IOStats] = None
+    ) -> List[ev.EventBatch]: ...
+
+    def multi_range_scan(
+        self,
+        reqs: Sequence[ScanRequest],
+        out_stats: Optional[IOStats] = None,
+    ) -> List[ev.EventBatch]: ...
+
+    def estimate_scan(self, req: ScanRequest) -> Tuple[int, int]: ...
+
+    # -- generations + leases ------------------------------------------------
+    def acquire_lease(
+        self, generation: Optional[int] = None
+    ) -> LeaseProtocol: ...
+
+    def has_generation(self, generation: int) -> bool: ...
+
+    def leased_generations(self) -> Dict[int, int]: ...
+
+    def retained_generations(self) -> List[int]: ...
+
+    # -- placement + introspection -------------------------------------------
+    def live_placement(self) -> Optional[PlacementMap]: ...
+
+    def watermark(self, user_id: int, group: str = "core",
+                  generation: int = -1) -> int: ...
+
+    def stored_events(self, user_id: int, group: str) -> int: ...
+
+    def stored_bytes(self) -> int: ...
+
+    def close(self) -> None: ...

@@ -1,0 +1,508 @@
+"""Disaggregated immutable tier: a multi-node sharded store (§4.2.3).
+
+The paper's normalized immutable UIH tier is a horizontally sharded service;
+this module splits the in-process monolith into:
+
+  * ``StoreNode`` — one storage node, owning its resident shard tables, its
+    stripe-decode LRU, its per-node ``IOStats`` and its generation/lease
+    state. A node is a full ``ImmutableUIHStore`` (bulk load, planned batch
+    scans over its *local* shards, leases) that happens to hold only the
+    users placed on it.
+  * ``ShardedUIHStore`` — the client every consumer actually talks to. It
+    implements the complete ``StoreProtocol`` surface (``plan`` /
+    ``execute_plan`` / ``scan`` / ``bulk_load`` / ``acquire_lease`` /
+    ``estimate_scan`` / generations / introspection) by routing requests to
+    nodes through a per-generation ``PlacementMap`` and executing node groups
+    concurrently — one remote round-trip per node, nodes overlapped on a
+    thread pool, each node further parallelizing across its local shards.
+
+**Placement** (FlexShard-style, 2301.02959): the torso routes by symmetric
+hash (``shard_of`` -> ``node_of_shard``); the heavy tail of ultra-long users
+gets an explicit balanced assignment recomputed from the generation's actual
+stripe bytes (``length_aware_overrides``). The resulting map is generation
+metadata: the client retains the map of every live/retained generation, so a
+pinned scan finds its bytes on the node where *that* generation placed them
+even after a later ``rebalance()`` moved the user.
+
+**Epoch barrier**: ``bulk_load`` and ``acquire_lease`` serialize on one flip
+lock. A lease therefore pins the SAME generation on every node — there is no
+interleaving where node 0 leases generation g while node 1 has already
+flipped to g+1 — which is exactly the consistency the snapshotter's
+transient lease and the streaming pin protocol (PR 3/4) assume. The lock is
+never taken on the scan path: reads stay lock-free exactly like the
+monolith's.
+
+**Fault surface**: a node marked down (``set_node_down``) fails its scans
+with ``NodeUnavailable`` — a *retryable* I/O error (the DPP pool's
+self-healing requeues the item), distinct from ``GenerationUnavailable``
+(the remediation path). Metadata reads (watermark, estimates, leases) stay
+up: an outage takes out data I/O, not the control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import events as ev
+from repro.storage.immutable_store import (
+    GenerationUnavailable,
+    ImmutableUIHStore,
+    IOStats,
+    LeaseStats,
+    ScanPlan,
+    ScanRequest,
+    build_scan_plan,
+)
+from repro.storage.sharding import (
+    PlacementMap,
+    ShardRouter,
+    length_aware_overrides,
+)
+
+
+class NodeUnavailable(IOError):
+    """A store node is unreachable. Transient and retryable: the caller's
+    work item fails cleanly (no partial result is returned) and a retry after
+    the node returns succeeds — unlike ``GenerationUnavailable``, which means
+    the *data* is gone and remediation must re-resolve."""
+
+
+class StoreNode(ImmutableUIHStore):
+    """One node of the disaggregated immutable tier.
+
+    Owns everything node-local: shard tables for the users placed here, the
+    stripe-decode LRU, per-node ``IOStats``, and this node's generation /
+    lease state. ``n_shards`` is the node's LOCAL shard count (its internal
+    scan parallelism); global routing is the client's job."""
+
+    # decorrelates the node-LOCAL shard hash from the global placement hash:
+    # a node's residents all agree on shard_of(u, n_global) mod n_nodes, and
+    # nested moduli of the same mix value collapse them into one local shard
+    # (see ShardRouter.salt) — killing the node's internal scan parallelism
+    LOCAL_SALT = 0x5DEECE66D
+
+    def __init__(self, node_id: int, schema=None, n_shards: int = 2,
+                 decode_cache_size: int = 256):
+        super().__init__(schema, n_shards=n_shards,
+                         decode_cache_size=decode_cache_size)
+        self.router = ShardRouter(n_shards, salt=self.LOCAL_SALT)
+        self.node_id = node_id
+
+    def __repr__(self) -> str:
+        return (f"StoreNode(id={self.node_id}, gen={self.generation}, "
+                f"local_shards={self.n_shards})")
+
+
+@dataclasses.dataclass
+class NodeStats:
+    """Per-node skew surface: who is doing the work and who holds the bytes.
+
+    ``max_mean_*_ratio`` is the p-max load metric the placement policy
+    optimizes: 1.0 = perfectly even, N = one node carries everything."""
+
+    per_node: List[IOStats]          # each node's cumulative IOStats snapshot
+    scan_load: List[int]             # bytes_scanned per node (read skew)
+    seeks: List[int]                 # seeks per node
+    decodes: List[int]               # stripes decoded per node
+    stored: List[int]                # resident blob bytes per node (placement)
+    max_mean_load_ratio: float       # max/mean of scan_load
+    max_mean_stored_ratio: float     # max/mean of stored
+
+    @staticmethod
+    def _ratio(values: Sequence[int]) -> float:
+        mean = sum(values) / max(len(values), 1)
+        return (max(values) / mean) if mean > 0 else 1.0
+
+
+class ShardedGenerationLease:
+    """One logical lease = one node lease on EVERY node, acquired under the
+    flip lock so all of them name the same generation (epoch barrier)."""
+
+    __slots__ = ("generation", "_store", "_node_leases", "_released")
+
+    def __init__(self, store: "ShardedUIHStore", generation: int, node_leases):
+        self.generation = generation
+        self._store = store
+        self._node_leases = node_leases
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._store._release_client_lease(self.generation,
+                                              self._node_leases)
+
+    def __enter__(self) -> "ShardedGenerationLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class ShardedUIHStore:
+    """Multi-node client for the disaggregated immutable tier.
+
+    Drop-in for ``ImmutableUIHStore`` everywhere the ``StoreProtocol`` is
+    spoken — same plan/execute/lease surface, same ``StaleGeneration``
+    remediation contract — with reads fanned out across ``n_nodes`` store
+    nodes and placement that keeps ultra-long users from hot-spotting one
+    node."""
+
+    def __init__(
+        self,
+        schema=None,
+        n_shards: int = 8,
+        n_nodes: int = 4,
+        decode_cache_size: int = 256,
+        placement_policy: str = "length_aware",   # "length_aware" | "hash"
+        heavy_tail_fraction: float = 0.05,
+    ):
+        if n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+        if placement_policy not in ("length_aware", "hash"):
+            raise ValueError(f"unknown placement_policy {placement_policy!r}")
+        self.schema = (schema if schema is not None
+                       else ev.default_schema())
+        self.n_shards = n_shards
+        self.n_nodes = n_nodes
+        self.router = ShardRouter(n_shards)   # symmetric data-placement key
+        self.placement_policy = placement_policy
+        self.heavy_tail_fraction = heavy_tail_fraction
+        local_shards = max(1, n_shards // n_nodes)
+        self.nodes: List[StoreNode] = [
+            StoreNode(i, self.schema, n_shards=local_shards,
+                      decode_cache_size=decode_cache_size)
+            for i in range(n_nodes)
+        ]
+        self.generation = -1
+        # epoch barrier: generation flips and lease acquisition serialize here
+        # (the scan path never takes it — reads stay lock-free per node)
+        self._flip_lock = threading.Lock()
+        self._lease_refs: Dict[int, int] = {}     # gen -> logical lease refs
+        self._lease_ls = LeaseStats()
+        # placement is generation metadata: retained as long as the
+        # generation is live or lease-retained anywhere
+        self._live_placement = PlacementMap(n_nodes, n_shards, {})
+        self._placements: Dict[int, PlacementMap] = {}
+        self._rebalance_pending = False
+        self._down = [False] * n_nodes
+        self._stats_lock = threading.Lock()
+        self._client_plan_stats = IOStats()   # batched_requests/dedup/subsumed
+        self._pool = ThreadPoolExecutor(
+            max_workers=min(n_nodes, 16), thread_name_prefix="uih-node")
+
+    # -- placement -----------------------------------------------------------
+    def live_placement(self) -> PlacementMap:
+        return self._live_placement
+
+    def placement_for(self, generation: int) -> PlacementMap:
+        """The map that generation's bulk load placed users with (live map
+        for -1/unknown: an unknown pinned generation is GC'd, and its scan
+        will raise ``GenerationUnavailable`` wherever it lands)."""
+        if generation < 0:
+            return self._live_placement
+        return self._placements.get(generation, self._live_placement)
+
+    def rebalance(self) -> Dict[int, int]:
+        """Recompute heavy-tail placement at the NEXT generation flip.
+
+        Placement is otherwise sticky across flips (daily compaction must not
+        reshuffle the torso's working set); ``rebalance()`` marks the next
+        ``bulk_load`` to re-derive the override map from the new generation's
+        actual stripe bytes. Returns a preview computed from the LIVE tables
+        so operators can see the planned moves."""
+        with self._flip_lock:
+            self._rebalance_pending = True
+            loads = self._live_loads()
+        return length_aware_overrides(
+            loads, self.n_nodes, self.n_shards, self.heavy_tail_fraction)
+
+    def _live_loads(self) -> Dict[int, int]:
+        loads: Dict[int, int] = {}
+        for node in self.nodes:
+            for shard in node._shards:
+                for (uid, _group), (_starts, stripes) in shard.items():
+                    loads[uid] = loads.get(uid, 0) + sum(
+                        len(s.blob) for s in stripes)
+        return loads
+
+    # -- node routing ---------------------------------------------------------
+    def _node_of(self, user_id: int, generation: int = -1) -> int:
+        return self.placement_for(generation).node_of(user_id)
+
+    def _node_for(self, user_id: int, generation: int = -1,
+                  check_down: bool = False) -> StoreNode:
+        nid = self._node_of(user_id, generation)
+        if check_down and self._down[nid]:
+            raise NodeUnavailable(f"store node {nid} is down")
+        return self.nodes[nid]
+
+    def set_node_down(self, node_id: int, down: bool = True) -> None:
+        """Mark a node unreachable: its scans raise ``NodeUnavailable`` until
+        it is marked up again. Metadata reads and leases are unaffected."""
+        self._down[node_id] = down
+
+    # -- write path -----------------------------------------------------------
+    def bulk_load(self, tables, generation: int) -> None:
+        """Install a generation on every node atomically w.r.t. leases.
+
+        Runs under the flip lock (the epoch barrier): once any node sees the
+        new generation, every concurrent ``acquire_lease`` sees it on ALL
+        nodes. Lease-id reuse is validated client-side BEFORE any node
+        installs, so a rejected load never leaves nodes on mixed
+        generations. Every node receives the load (possibly with an empty
+        table subset) so generation state stays uniform across the tier."""
+        with self._flip_lock:
+            if generation >= 0 and self._lease_refs.get(generation, 0) > 0:
+                raise ValueError(
+                    f"generation id {generation} is still leased "
+                    f"(refs={self._lease_refs[generation]}); ids must not be "
+                    f"reused while leased")
+            placement = self._placement_for_load(tables)
+            node_tables: List[dict] = [{} for _ in self.nodes]
+            for (user_id, group), stripes in tables.items():
+                node_tables[placement.node_of(user_id)][(user_id, group)] = \
+                    stripes
+            for node, sub in zip(self.nodes, node_tables):
+                node.bulk_load(sub, generation)
+            self.generation = generation
+            self._placements[generation] = placement
+            self._live_placement = placement
+            self._rebalance_pending = False
+            self._gc_placements_locked()
+
+    def _placement_for_load(self, tables) -> PlacementMap:
+        if self.placement_policy == "hash":
+            return PlacementMap(self.n_nodes, self.n_shards, {})
+        if self.generation >= 0 and not self._rebalance_pending:
+            # sticky: reuse the live overrides until an explicit rebalance —
+            # daily compaction must not migrate users as a side effect
+            return PlacementMap(self.n_nodes, self.n_shards,
+                                dict(self._live_placement.overrides))
+        loads: Dict[int, int] = {}
+        for (user_id, _group), stripes in tables.items():
+            loads[user_id] = loads.get(user_id, 0) + sum(
+                len(s.blob) for s in stripes)
+        return PlacementMap(
+            self.n_nodes, self.n_shards,
+            length_aware_overrides(loads, self.n_nodes, self.n_shards,
+                                   self.heavy_tail_fraction))
+
+    def _gc_placements_locked(self) -> None:
+        for g in list(self._placements):
+            if g != self.generation and not self.nodes[0].has_generation(g):
+                del self._placements[g]
+
+    # -- generation leases -----------------------------------------------------
+    def acquire_lease(
+        self, generation: Optional[int] = None
+    ) -> ShardedGenerationLease:
+        """Pin one CONSISTENT generation on every node (epoch barrier: the
+        flip lock orders this against ``bulk_load``, so all node leases name
+        the same generation). Raises ``GenerationUnavailable`` — with no
+        node lease left behind — if the generation is gone."""
+        with self._flip_lock:
+            node_leases = []
+            try:
+                for node in self.nodes:
+                    node_leases.append(node.acquire_lease(generation))
+            except GenerationUnavailable:
+                for lease in node_leases:
+                    lease.release()
+                raise
+            gen = node_leases[0].generation
+            self._lease_refs[gen] = self._lease_refs.get(gen, 0) + 1
+            self._lease_ls.acquired += 1
+        return ShardedGenerationLease(self, gen, node_leases)
+
+    def _release_client_lease(self, generation: int, node_leases) -> None:
+        with self._flip_lock:
+            for lease in node_leases:
+                lease.release()
+            self._lease_ls.released += 1
+            refs = self._lease_refs.get(generation, 0) - 1
+            if refs <= 0:
+                self._lease_refs.pop(generation, None)
+            else:
+                self._lease_refs[generation] = refs
+            self._gc_placements_locked()
+
+    @property
+    def lease_stats(self) -> LeaseStats:
+        """Logical (client-level) acquire/release counts; retention/GC cycles
+        are uniform across nodes, so node 0's counters stand for the tier."""
+        n0 = self.nodes[0].lease_stats
+        return LeaseStats(
+            acquired=self._lease_ls.acquired,
+            released=self._lease_ls.released,
+            generations_retained=n0.generations_retained,
+            generations_gc=n0.generations_gc,
+        )
+
+    def has_generation(self, generation: int) -> bool:
+        # every bulk_load and every lease touches all nodes, so they agree
+        return self.nodes[0].has_generation(generation)
+
+    def leased_generations(self) -> Dict[int, int]:
+        """generation -> outstanding LOGICAL lease refcount (one sharded
+        lease counts once, not once per node)."""
+        with self._flip_lock:
+            return dict(self._lease_refs)
+
+    def retained_generations(self) -> List[int]:
+        out = set()
+        for node in self.nodes:
+            out.update(node.retained_generations())
+        return sorted(out)
+
+    # -- read path -------------------------------------------------------------
+    def _effective_traits(self, req: ScanRequest) -> Tuple[str, ...]:
+        return req.traits or self.schema.group_traits(req.group)
+
+    def scan(self, req: ScanRequest) -> ev.EventBatch:
+        return self._node_for(req.user_id, req.generation,
+                              check_down=True).scan(req)
+
+    def estimate_scan(self, req: ScanRequest) -> Tuple[int, int]:
+        """Metadata-only cost walk (see the monolith): routed like the scan
+        would be, but served even from a down node — estimates are control
+        plane, not data I/O."""
+        return self._node_for(req.user_id, req.generation).estimate_scan(req)
+
+    def plan(self, reqs: Sequence[ScanRequest]) -> ScanPlan:
+        """Client-side planning: dedupe + union-projection subsumption over
+        the whole batch (a request answered by an in-plan twin or carved from
+        a wider root never crosses the network at all), roots grouped by
+        TARGET NODE — ``ScanPlan.shard_groups`` keys are node ids here."""
+        return build_scan_plan(
+            reqs,
+            lambda r: self._node_of(r.user_id, r.generation),
+            self._effective_traits)
+
+    def execute_plan(
+        self, plan: ScanPlan, out_stats: Optional[IOStats] = None
+    ) -> List[ev.EventBatch]:
+        """Execute node groups concurrently: ONE batched round-trip per node
+        (the node replans its slice over its local shards and parallelizes
+        there), subsumed requests carved client-side from the covering
+        results. Results return in original request order."""
+        results: List[Optional[ev.EventBatch]] = [None] * len(plan.unique)
+
+        def run_node(pair) -> IOStats:
+            nid, idxs = pair
+            if self._down[nid]:
+                raise NodeUnavailable(f"store node {nid} is down")
+            local = IOStats()
+            parts = self.nodes[nid].multi_range_scan(
+                [plan.unique[j] for j in idxs], local)
+            for j, part in zip(idxs, parts):
+                results[j] = part
+            return local
+
+        groups = list(plan.shard_groups.items())
+        if len(groups) <= 1:
+            node_locals = [run_node(g) for g in groups]
+        else:
+            node_locals = list(self._pool.map(run_node, groups))
+        for j, k in plan.derived.items():
+            results[j] = ev.tail_view(results[k], plan.unique[j].max_events,
+                                      self._effective_traits(plan.unique[j]))
+        call = IOStats()
+        for local in node_locals:
+            call.merge(local)
+        # plan-level counters are the CLIENT's: nodes each count their own
+        # round-trip, and dedupe/subsumption already happened up here
+        call.batched_requests = 1
+        call.dedup_hits = plan.dedup_hits
+        call.subsumed_hits = plan.subsumed
+        with self._stats_lock:
+            self._client_plan_stats.batched_requests += 1
+            self._client_plan_stats.dedup_hits += plan.dedup_hits
+            self._client_plan_stats.subsumed_hits += plan.subsumed
+        if out_stats is not None:
+            out_stats.merge(call)
+        return [results[j] for j in plan.assignment]
+
+    def multi_range_scan(
+        self,
+        reqs: Sequence[ScanRequest],
+        out_stats: Optional[IOStats] = None,
+    ) -> List[ev.EventBatch]:
+        return self.execute_plan(self.plan(reqs), out_stats)
+
+    # -- stats + introspection -------------------------------------------------
+    @property
+    def stats(self) -> IOStats:
+        """Tier-wide view: physical I/O summed over nodes, plan-level
+        counters (batched_requests / dedup_hits / subsumed_hits) from the
+        client planner. ``parallel_shards`` sums the nodes' local shard
+        fanout — the tier's real physical scan parallelism."""
+        agg = IOStats()
+        for node in self.nodes:
+            agg.merge(node.stats)
+        with self._stats_lock:
+            agg.batched_requests = self._client_plan_stats.batched_requests
+            agg.dedup_hits = self._client_plan_stats.dedup_hits
+            agg.subsumed_hits = self._client_plan_stats.subsumed_hits
+        return agg
+
+    def node_stats(self) -> NodeStats:
+        per_node = [node.stats.snapshot() for node in self.nodes]
+        scan_load = [s.bytes_scanned for s in per_node]
+        stored = [node.stored_bytes() for node in self.nodes]
+        return NodeStats(
+            per_node=per_node,
+            scan_load=scan_load,
+            seeks=[s.seeks for s in per_node],
+            decodes=[s.stripes_read for s in per_node],
+            stored=stored,
+            max_mean_load_ratio=NodeStats._ratio(scan_load),
+            max_mean_stored_ratio=NodeStats._ratio(stored),
+        )
+
+    @property
+    def latency_model(self):
+        return self.nodes[0].latency_model
+
+    @latency_model.setter
+    def latency_model(self, model) -> None:
+        # each node charges its own remote-I/O latency; node groups overlap
+        # on the client pool, so a batch's wall time is the max over nodes
+        for node in self.nodes:
+            node.latency_model = model
+
+    @property
+    def bulk_load_bytes(self) -> int:
+        return sum(node.bulk_load_bytes for node in self.nodes)
+
+    def stored_bytes(self) -> int:
+        return sum(node.stored_bytes() for node in self.nodes)
+
+    def retained_bytes(self) -> int:
+        return sum(node.retained_bytes() for node in self.nodes)
+
+    def stored_events(self, user_id: int, group: str) -> int:
+        return self._node_for(user_id).stored_events(user_id, group)
+
+    def watermark(self, user_id: int, group: str = "core",
+                  generation: int = -1) -> int:
+        return self._node_for(user_id, generation).watermark(
+            user_id, group, generation)
+
+    def fanout(self, reqs: Sequence[ScanRequest]) -> int:
+        """Distinct NODES a batch touches (the cross-network fanout the
+        affinity planner minimizes)."""
+        return len({self._node_of(r.user_id, r.generation) for r in reqs})
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        for node in self.nodes:
+            node.close()
+
+    def __enter__(self) -> "ShardedUIHStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

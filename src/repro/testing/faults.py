@@ -20,6 +20,10 @@ Injectable kinds:
   * ``compaction_during_scan`` — the plan's ``on_compact`` callback (e.g.
                               ``sim.run_compaction``) runs immediately before
                               the Nth scan: a generation flip races the read;
+  * ``node_unavailable``    — the Nth store scan finds one store node of the
+                              disaggregated tier down and raises
+                              ``NodeUnavailable`` (retryable: the node is back
+                              for the retry, no lease is leaked);
   * ``stream_disconnect``   — the Nth stream consume raises
                               ``StreamDisconnect`` (healed in place by
                               ``StreamingSource``).
@@ -40,6 +44,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.storage.sharded_store import NodeUnavailable
 from repro.storage.stream import StreamDisconnect
 
 
@@ -60,7 +65,7 @@ class WorkerCrash(InjectedFault, RuntimeError):
 
 
 SCAN_KINDS = ("compaction_during_scan", "scan_ioerror", "decode_corruption",
-              "worker_crash")
+              "worker_crash", "node_unavailable")
 CONSUME_KINDS = ("stream_disconnect",)
 ALL_KINDS = SCAN_KINDS + CONSUME_KINDS
 
@@ -173,6 +178,9 @@ class FaultyStore(_Delegate):
             elif f.kind == "worker_crash":
                 raise WorkerCrash(
                     f"injected worker crash (scan tick {f.at})")
+            elif f.kind == "node_unavailable":
+                raise NodeUnavailable(
+                    f"injected store-node outage (scan tick {f.at})")
 
     def scan(self, req):
         self._maybe_fault()

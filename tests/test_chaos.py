@@ -108,12 +108,17 @@ BATCH_FAULTS = {
     "decode_corruption": [FaultSpec("decode_corruption", 2)],
     "compaction_during_scan": [FaultSpec("compaction_during_scan", 1),
                                FaultSpec("compaction_during_scan", 3)],
+    "node_unavailable": [FaultSpec("node_unavailable", 1),
+                         FaultSpec("node_unavailable", 4)],
 }
 
 
 @pytest.mark.parametrize("kind", sorted(BATCH_FAULTS))
 def test_batch_fault_matrix_byte_identical_and_audit_clean(kind):
-    sim = make_sim(users=6, days=2, seed=5)
+    # a node outage only makes sense on the disaggregated tier: run that kind
+    # on a 4-node ShardedUIHStore (same scenario otherwise)
+    sim = make_sim(users=6, days=2, seed=5,
+                   nodes=4 if kind == "node_unavailable" else 0)
     spec = _spec(WarehouseSource(), consistency="audit")
     clean = _drain(open_feed(spec, sim))
     assert clean and _row_keys(clean) == _example_keys(sim.examples)
@@ -127,9 +132,12 @@ def test_batch_fault_matrix_byte_identical_and_audit_clean(kind):
     assert plan.n_fired == len(BATCH_FAULTS[kind])   # every fault really fired
     _assert_batches_equal(clean, chaos)
     st = feed.stats()
-    if kind in ("worker_crash", "scan_ioerror", "decode_corruption"):
+    if kind in ("worker_crash", "scan_ioerror", "decode_corruption",
+                "node_unavailable"):
         assert st.workers.worker_restarts >= len(BATCH_FAULTS[kind])
         assert st.workers.items_requeued >= len(BATCH_FAULTS[kind])
+    if kind == "node_unavailable":   # zero leaked leases after the outage
+        assert sim.immutable.leased_generations() == {}
     _audit_clean(sim)
 
 
@@ -143,20 +151,21 @@ STREAM_FAULTS["stream_disconnect"] = [FaultSpec("stream_disconnect", 1),
                                       FaultSpec("stream_disconnect", 7)]
 
 
-def _stream_sim(seed=9):
-    sim = make_sim(users=6, days=2, seed=seed, pin=True)
+def _stream_sim(seed=9, nodes=0):
+    sim = make_sim(users=6, days=2, seed=seed, pin=True, nodes=nodes)
     sim.stream.close()   # sealed backlog: the feed drains it and ends
     return sim
 
 
 @pytest.mark.parametrize("kind", sorted(STREAM_FAULTS))
 def test_streaming_fault_matrix_byte_identical_and_audit_clean(kind):
+    nodes = 4 if kind == "node_unavailable" else 0
     spec = _spec(StreamSource(), consistency="audit", generations="pinned")
-    sim_clean = _stream_sim()
+    sim_clean = _stream_sim(nodes=nodes)
     clean = _drain(open_feed(spec, sim_clean))
     assert clean and _row_keys(clean) == _example_keys(sim_clean.examples)
 
-    sim = _stream_sim()
+    sim = _stream_sim(nodes=nodes)
     plan = FaultPlan(
         STREAM_FAULTS[kind],
         on_compact=lambda: sim.run_compaction(sim.compaction_watermark,

@@ -1,0 +1,474 @@
+"""Disaggregated immutable tier (DESIGN.md §11): ShardedUIHStore vs monolith.
+
+Covers the PR's acceptance spine:
+  * interchangeability — the SAME materialize / snapshot / co-scan / lease
+    scenarios that tier-1 runs on the monolith produce byte-identical output
+    on a 4-node ``ShardedUIHStore`` (including the PR 3 generation-flip audit
+    stress and the PR 5 kill-and-resume acceptance);
+  * epoch-barrier generation flips — a lease pins ONE consistent generation
+    on every node, even with bulk loads racing lease acquisition;
+  * length-aware placement — heavy-tail overrides cut max/mean node skew vs
+    pure hashing, the map rides generation metadata (pinned scans route with
+    the generation that placed them, across a rebalance), and
+    ``plan_affine`` keeps DPP work items node-local (zero cross-node fanout);
+  * fault surface — a down node fails scans with the retryable
+    ``NodeUnavailable`` while leases/metadata stay up and nothing leaks.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_sim
+from repro.core import events as ev
+from repro.core.consistency import audit
+from repro.core.materialize import Materializer, TenantShareStats
+from repro.core.projection import TenantProjection
+from repro.data import DatasetSpec, WarehouseSource, open_feed
+from repro.dpp.affinity import plan_affine
+from repro.dpp.featurize import FeatureSpec
+from repro.storage.compaction import CompactionConfig, CompactionPipeline
+from repro.storage.immutable_store import GenerationUnavailable, ScanRequest
+from repro.storage.protocol import StoreProtocol
+from repro.storage.sharded_store import (
+    NodeUnavailable,
+    ShardedUIHStore,
+    StoreNode,
+)
+from repro.storage.sharding import PlacementMap, shard_of
+
+SCHEMA = ev.default_schema()
+
+TENANT = TenantProjection(
+    "t", 16, ("core",),
+    traits_per_group={"core": ("timestamp", "item_id", "action_type")})
+FEATURES = FeatureSpec(seq_len=16, uih_traits=("item_id", "action_type"))
+
+
+def _views_equal(a, b, ctx=""):
+    assert set(a.keys()) == set(b.keys()), ctx
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{ctx} trait {k}")
+
+
+# ---------------------------------------------------------------------------
+# synthetic heavy-tailed population (for placement tests)
+# ---------------------------------------------------------------------------
+
+def _user_events(uid: int, n: int) -> ev.EventBatch:
+    rng = np.random.default_rng(uid + 1)
+    batch = {}
+    for name in SCHEMA.trait_names:
+        dt = SCHEMA.spec(name).dtype
+        batch[name] = rng.integers(0, 100, n).astype(dt)
+    batch["timestamp"] = np.sort(
+        rng.integers(0, 900_000, n)).astype(np.int64)
+    return batch
+
+
+def _load_skewed(store, heavy_users=(3, 11, 19, 27), torso_n=30,
+                 heavy_n=3_000, n_users=64, generation=None):
+    """One compacted generation over a heavy-tailed population: a few users
+    carry ~100x the torso's bytes (the FlexShard setting)."""
+    events = {u: _user_events(u, heavy_n if u in heavy_users else torso_n)
+              for u in range(n_users)}
+    pipe = CompactionPipeline(SCHEMA, CompactionConfig(stripe_len=64))
+    source = lambda uid, lo, hi: ev.time_slice(events[uid], lo, hi)
+    pipe.run(source, list(range(n_users)), 1_000_000, store,
+             generation=generation)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# interchangeability: monolith scenarios, byte-identical on 4 nodes
+# ---------------------------------------------------------------------------
+
+def test_sharded_store_satisfies_protocol():
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    assert isinstance(store, StoreProtocol)
+    store.close()
+
+
+@pytest.mark.parametrize("mode", ["vlm", "fatrow"])
+def test_materialize_byte_identical_to_monolith(mode):
+    mono = make_sim(users=8, days=2, seed=21, mode=mode)
+    shard = make_sim(users=8, days=2, seed=21, mode=mode, nodes=4)
+    assert len(mono.examples) == len(shard.examples)
+
+    want = mono.materializer().materialize_batch(mono.examples, TENANT)
+    mat = shard.materializer()
+    got = mat.materialize_batch(shard.examples, TENANT)
+    for i, (a, b) in enumerate(zip(want, got)):
+        _views_equal(a, b, f"example {i}")
+    if mode == "vlm":
+        # the planned path really ran on the client: one co-planned round per
+        # materialize_batch window group, with client-side dedupe
+        assert mat.io_stats.batched_requests >= 1
+        assert mat.io_stats.dedup_hits > 0
+        # and more than one node did physical work
+        ns = shard.immutable.node_stats()
+        assert sum(1 for b_ in ns.scan_load if b_ > 0) > 1
+
+
+def test_audit_clean_on_four_nodes():
+    sim = make_sim(users=8, days=2, seed=7, nodes=4)
+    mat = sim.materializer(validate_checksum=True)
+    report = audit(sim.examples, sim.references, mat, sim.schema, TENANT)
+    assert report.clean
+    assert report.examples == len(sim.examples)
+
+
+def test_coscan_on_sharded_matches_solo():
+    sim = make_sim(users=6, days=2, seed=13, nodes=4)
+    tenants = [
+        TenantProjection("wide", 12, ("core", "engagement"),
+                         traits_per_group={
+                             "core": ("timestamp", "item_id", "action_type"),
+                             "engagement": ("like", "watch_time_ms")}),
+        TenantProjection("narrow", 6, ("core",),
+                         traits_per_group={"core": ("timestamp", "item_id")}),
+    ]
+    multi = Materializer(sim.immutable, sim.schema)
+    solos = {t.name: Materializer(sim.immutable, sim.schema) for t in tenants}
+    share = TenantShareStats()
+    for lo in range(0, len(sim.examples), 8):
+        batch = sim.examples[lo:lo + 8]
+        got = multi.materialize_multi(batch, tenants, share_stats=share)
+        for t in tenants:
+            want = solos[t.name].materialize_batch(batch, t)
+            for i, (a, b) in enumerate(zip(want, got[t.name])):
+                _views_equal(a, b, f"{t.name} {lo + i}")
+    assert share.co_scan_windows > 0
+    assert share.bytes_saved_vs_solo > 0
+
+
+def test_generation_flip_audit_stress_on_sharded():
+    """The PR 3 adversarial lease scenario on 4 nodes: compaction churns
+    fresh generation ids at the established watermark WHILE pinned
+    materialization replays the stream backlog — audit stays clean, leases
+    drain, retained generations GC."""
+    sim = make_sim(users=6, days=2, seed=13, pin=True, nodes=4)
+    assert sim.stream.pending_leases() > 0
+    gen_start = sim.immutable.generation
+    stop = threading.Event()
+    flips = [0]
+    wm = sim.compaction_watermark
+
+    def churn():
+        while not stop.is_set() or flips[0] < 2:
+            sim.run_compaction(wm, evict=False)
+            flips[0] += 1
+            time.sleep(0.003)
+
+    th = threading.Thread(target=churn, daemon=True)
+    th.start()
+    try:
+        mat = sim.materializer(validate_checksum=True, pin_generations=True)
+        report = audit(sim.examples, sim.references, mat, sim.schema, TENANT)
+        assert report.clean, report
+        assert mat.stats.stale_failures == 0
+    finally:
+        stop.set()
+        th.join()
+    assert flips[0] >= 2
+    assert sim.immutable.generation - gen_start >= 2
+
+
+def test_kill_and_resume_batch_on_sharded(tmp_path):
+    """PR 5 exactly-once acceptance, immutable tier on 4 nodes: kill the
+    trainer mid-run, resume from the checkpoint's feed cursor, and the replay
+    is byte-identical to the uninterrupted run."""
+    from repro.train.train_loop import Trainer, TrainerConfig
+    import jax.numpy as jnp
+
+    sim = make_sim(users=6, days=2, seed=6, capture_reference=False, nodes=4)
+    spec = DatasetSpec(tenant=TENANT, source=WarehouseSource(),
+                       features=FEATURES, batch_size=8, base_batch_size=4,
+                       n_workers=2, prefetch_depth=0, reshuffle_seed=3)
+    clean_feed = open_feed(spec, sim)
+    uninterrupted = list(clean_feed)
+    clean_feed.join()
+    n_batches = len(uninterrupted)
+    assert n_batches >= 4
+
+    def loss_fn(params, b):
+        score = jnp.sum(b["uih_item_id"] * params["w"], axis=1)
+        return jnp.mean((score - b["label_click"]) ** 2)
+
+    params = {"w": jnp.zeros((16,), jnp.float32)}
+    cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2, log_every=10**6)
+    recorded1 = []
+    t1 = Trainer(loss_fn, params, cfg)
+    feed1 = open_feed(spec, sim,
+                      prep_fn=lambda b: (recorded1.append(b), b)[1])
+    t1.fit(feed1, max_steps=n_batches - 2)
+    feed1.close(timeout=30.0)
+
+    t2 = Trainer(loss_fn, params, cfg)
+    assert t2.try_resume()
+    restored_step = t2.step
+    feed_state = t2.ckpt.feed_state(restored_step)
+    assert feed_state is not None
+    recorded2 = []
+    feed2 = open_feed(spec, sim, resume_from=feed_state,
+                      prep_fn=lambda b: (recorded2.append(b), b)[1])
+    t2.fit(feed2)
+    feed2.close(timeout=30.0)
+
+    replay = recorded1[:restored_step] + recorded2
+    assert len(replay) == len(uninterrupted)
+    for i, (a, b) in enumerate(zip(uninterrupted, replay)):
+        _views_equal(a, b, f"batch {i}")
+
+
+# ---------------------------------------------------------------------------
+# epoch barrier + lease consistency
+# ---------------------------------------------------------------------------
+
+def test_lease_pins_consistent_generation_on_every_node():
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    _load_skewed(store, generation=0)
+    with store.acquire_lease() as lease:
+        assert lease.generation == 0
+        assert all(n.has_generation(0) for n in store.nodes)
+        _load_skewed(store, generation=1)        # flip under the lease
+        # superseded generation stays retained on EVERY node...
+        assert all(n.has_generation(0) for n in store.nodes)
+        assert store.leased_generations() == {0: 1}
+        # ...and pinned scans on it still work
+        got = store.scan(ScanRequest(3, "core", 0, 10**9, generation=0))
+        assert ev.batch_len(got) > 0
+    # release drains retention everywhere
+    assert store.leased_generations() == {}
+    assert all(not n.has_generation(0) for n in store.nodes)
+    with pytest.raises(GenerationUnavailable):
+        store.scan(ScanRequest(3, "core", 0, 10**9, generation=0))
+    store.close()
+
+
+def test_epoch_barrier_under_concurrent_flips():
+    """Race bulk loads against lease acquisition from many threads: every
+    lease must name a generation that is retained on ALL nodes for the
+    lease's whole lifetime (the barrier property), and nothing leaks."""
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    events = _load_skewed(store, generation=0)
+    stop = threading.Event()
+    errors = []
+    flips = [0]
+
+    def flipper():
+        g = 1
+        pipe = CompactionPipeline(SCHEMA, CompactionConfig(stripe_len=64))
+        source = lambda uid, lo, hi: ev.time_slice(events[uid], lo, hi)
+        while not stop.is_set():
+            pipe.run(source, list(events), 1_000_000, store, generation=g)
+            flips[0] += 1
+            g += 1
+
+    def leaser():
+        try:
+            # keep leasing until the flipper has raced us several times
+            rounds = 0
+            while rounds < 40 or flips[0] < 3:
+                rounds += 1
+                with store.acquire_lease() as lease:
+                    for node in store.nodes:
+                        assert node.has_generation(lease.generation), \
+                            (node.node_id, lease.generation)
+                    # a scan pinned to the leased generation never misses
+                    store.scan(ScanRequest(3, "core", 0, 10**9,
+                                           generation=lease.generation))
+        except Exception as e:   # noqa: BLE001 - collected for the assert
+            errors.append(e)
+
+    th_flip = threading.Thread(target=flipper, daemon=True)
+    leasers = [threading.Thread(target=leaser, daemon=True) for _ in range(4)]
+    th_flip.start()
+    for t in leasers:
+        t.start()
+    for t in leasers:
+        t.join()
+    stop.set()
+    th_flip.join()
+    assert not errors, errors
+    assert flips[0] >= 3            # the race really happened
+    assert store.leased_generations() == {}
+    assert store.retained_generations() == []   # nothing outlives its lease
+    store.close()
+
+
+def test_bulk_load_of_leased_generation_id_rejected_atomically():
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    _load_skewed(store, generation=5)
+    lease = store.acquire_lease()
+    with pytest.raises(ValueError, match="leased"):
+        _load_skewed(store, generation=5)
+    # the rejected load touched NO node: all still on generation 5 content
+    assert store.generation == 5
+    assert all(n.generation == 5 for n in store.nodes)
+    lease.release()
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# length-aware placement
+# ---------------------------------------------------------------------------
+
+def test_length_aware_placement_cuts_node_skew():
+    hash_store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4,
+                                 placement_policy="hash")
+    la_store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4,
+                               placement_policy="length_aware")
+    # pick heavy users that hash-collide onto ONE node => guaranteed hot spot
+    heavy = [u for u in range(200)
+             if shard_of(u, 8) % 4 == 1][:4]
+    _load_skewed(hash_store, heavy_users=tuple(heavy), generation=0)
+    _load_skewed(la_store, heavy_users=tuple(heavy), generation=0)
+
+    skew_hash = hash_store.node_stats().max_mean_stored_ratio
+    skew_la = la_store.node_stats().max_mean_stored_ratio
+    assert skew_la < skew_hash          # the acceptance inequality
+    assert skew_la < 1.5 < skew_hash    # and decisively so
+    # heavy users actually got explicit override placements
+    overrides = la_store.live_placement().overrides
+    assert set(heavy) <= set(overrides)
+    # byte-equality: placement moves bytes, never changes them
+    for u in (heavy[0], 5):
+        a = hash_store.scan(ScanRequest(u, "core", 0, 10**9))
+        b = la_store.scan(ScanRequest(u, "core", 0, 10**9))
+        _views_equal(a, b, f"user {u}")
+    hash_store.close()
+    la_store.close()
+
+
+def test_placement_map_is_generation_metadata_across_rebalance():
+    """A pinned scan must route with the placement of the generation it
+    pins — not today's map — or the bytes are simply not there."""
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    heavy = [u for u in range(200) if shard_of(u, 8) % 4 == 1][:4]
+    events = _load_skewed(store, heavy_users=tuple(heavy), generation=0)
+    gen0_map = store.live_placement()
+    # a heavy user whose explicit placement MOVED it off its hash node: the
+    # pinned-routing property below is then non-vacuous
+    hash_node = lambda u: PlacementMap(4, 8, {}).node_of(u)
+    target = next(u for u in heavy
+                  if gen0_map.overrides[u] != hash_node(u))
+    lease = store.acquire_lease()     # pin generation 0
+    want = store.scan(ScanRequest(target, "core", 0, 10**9, generation=0))
+
+    # next flip: torso-only load (the heavy users churned away) + rebalance
+    # => generation 1 places `target` by hash again (no override)
+    store.rebalance()
+    torso_events = {u: events[u] for u in range(64) if u not in heavy}
+    pipe = CompactionPipeline(SCHEMA, CompactionConfig(stripe_len=64))
+    pipe.run(lambda uid, lo, hi: ev.time_slice(torso_events[uid], lo, hi),
+             list(torso_events), 1_000_000, store, generation=1)
+    assert store.live_placement().overrides.get(target) is None
+    assert store.placement_for(0).node_of(target) == gen0_map.node_of(target)
+
+    # pinned scan still routes with generation 0's map, byte-exact
+    got = store.scan(ScanRequest(target, "core", 0, 10**9, generation=0))
+    _views_equal(want, got, "pinned scan across rebalance")
+    lease.release()
+    # after the last release the superseded generation AND its map are GC'd
+    assert 0 not in store._placements
+    store.close()
+
+
+def test_plan_affine_items_stay_node_local_with_overrides():
+    """With heavy-tail overrides in play the (node, shard) tag — not the bare
+    shard — is the clustering key: every work item still lands on exactly one
+    store node (zero cross-node fanout), and the plan partitions the input."""
+    rng = np.random.default_rng(3)
+    placement = PlacementMap(
+        4, 8, {7: 2, 11: 0, 42: 1})   # overrides off their hash nodes
+    from repro.core.versioning import TrainingExample
+    examples = [
+        TrainingExample(request_id=i, user_id=int(rng.integers(0, 48)),
+                        request_ts=int(rng.integers(0, 10_000)), label_ts=0,
+                        candidate={"item_id": 0}, labels={"click": 0.0})
+        for i in range(120)
+    ]
+    plan = plan_affine(examples, 8, 6, placement=placement)
+    assert plan.expected_node_fanout == 1.0
+    for item in plan.items:
+        assert len({placement.node_of(e.user_id) for e in item}) == 1
+        assert len({shard_of(e.user_id, 8) for e in item}) == 1
+    got = sorted(e.request_id for item in plan.items for e in item)
+    assert got == list(range(120))
+    # permutation invariance survives the placement-aware sort key
+    shuffled = [examples[i] for i in rng.permutation(len(examples))]
+    plan2 = plan_affine(shuffled, 8, 6, placement=placement)
+    assert [[e.request_id for e in it] for it in plan.items] == \
+           [[e.request_id for e in it] for it in plan2.items]
+
+
+def test_sharded_plan_keeps_dedup_and_subsumption():
+    """Client-side planning preserves the co-scan machinery: duplicate
+    requests dedupe, narrower windows are carved from wider in-plan roots,
+    and only the roots cross the 'network' to the nodes."""
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    _load_skewed(store, generation=0)
+    users = [1, 2, 3, 4]
+    reqs = []
+    for u in users:
+        reqs.append(ScanRequest(u, "core", 0, 10**9))
+        reqs.append(ScanRequest(u, "core", 0, 10**9))          # duplicate
+        reqs.append(ScanRequest(u, "core", 0, 10**9, max_events=4))  # subsumed
+    plan = store.plan(reqs)
+    assert plan.dedup_hits == len(users)
+    assert plan.subsumed == len(users)
+    # shard_groups keys are NODE ids; only roots are dispatched
+    n_dispatched = sum(len(v) for v in plan.shard_groups.values())
+    assert n_dispatched == len(users)
+    assert set(plan.shard_groups) <= set(range(store.n_nodes))
+
+    out = store.execute_plan(plan)
+    assert len(out) == len(reqs)
+    for i, req in enumerate(reqs):
+        solo = store.nodes[store._node_of(req.user_id)].scan(req)
+        _views_equal(solo, out[i], f"req {i}")
+    agg = store.stats
+    assert agg.dedup_hits == len(users)
+    assert agg.subsumed_hits == len(users)
+    assert agg.batched_requests == 1
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# node outage
+# ---------------------------------------------------------------------------
+
+def test_down_node_scans_fail_retryable_and_recover():
+    store = ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4)
+    _load_skewed(store, generation=0)
+    # find a user on node 2 under the live placement
+    victim = next(u for u in range(64) if store._node_of(u) == 2)
+    bystander = next(u for u in range(64) if store._node_of(u) == 0)
+    store.set_node_down(2)
+    with pytest.raises(NodeUnavailable):
+        store.scan(ScanRequest(victim, "core", 0, 10**9))
+    with pytest.raises(NodeUnavailable):
+        store.multi_range_scan([ScanRequest(victim, "core", 0, 10**9)])
+    # NodeUnavailable is retryable I/O, NOT a remediation signal
+    assert not isinstance(NodeUnavailable("x"), KeyError)
+    # other nodes keep serving; leases/metadata stay up through the outage
+    assert ev.batch_len(store.scan(ScanRequest(bystander, "core", 0, 10**9))) > 0
+    assert store.watermark(victim) > 0
+    with store.acquire_lease() as lease:
+        assert lease.generation == 0
+    assert store.leased_generations() == {}
+    store.set_node_down(2, down=False)
+    assert ev.batch_len(store.scan(ScanRequest(victim, "core", 0, 10**9))) > 0
+    store.close()
+
+
+def test_store_node_is_a_full_store():
+    """A StoreNode alone satisfies the protocol (it IS the monolith plus an
+    identity): the client composes nodes, it doesn't special-case them."""
+    node = StoreNode(0, SCHEMA, n_shards=2)
+    assert isinstance(node, StoreProtocol)
+    assert node.live_placement() is None
+    assert node.node_id == 0
+    node.close()

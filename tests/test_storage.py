@@ -238,6 +238,27 @@ def test_shard_router_stable_and_uniform():
     assert shard_of(12345, 8) == shard_of(12345, 8)
 
 
+def test_shard_of_golden_values():
+    """The hash placement is LOAD-BEARING persistent state: warehouse buckets
+    and store shards are bucketed with it, so a silent drift (new mix
+    constants, int-width change) would invalidate symmetric bucketing of
+    every already-written generation. Golden values pin it forever."""
+    golden = {
+        0: [0, 0, 0, 0, 0],
+        1: [0, 1, 1, 1, 9],
+        2: [0, 0, 2, 2, 10],
+        7: [0, 0, 2, 6, 6],
+        42: [0, 1, 1, 5, 13],
+        999_983: [0, 0, 0, 0, 0],
+        123_456_789: [0, 0, 2, 6, 14],
+        2**31 - 1: [0, 1, 3, 3, 11],
+        2**63 - 1: [0, 1, 3, 7, 7],
+    }
+    for user_id, want in golden.items():
+        got = [shard_of(user_id, n) for n in (1, 2, 4, 8, 16)]
+        assert got == want, f"shard_of({user_id}) drifted: {got} != {want}"
+
+
 def test_symmetric_sharding_zero_fanout_for_bucketed_batch():
     """A user-bucketed batch touches exactly one immutable shard (§4.2.3)."""
     n_shards = 8
