@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.bench_feed",
     "benchmarks.bench_multitenant",
     "benchmarks.bench_sharded_store",
+    "benchmarks.bench_failover",
     "benchmarks.bench_streaming",
     "benchmarks.bench_chaos",
     "benchmarks.bench_kernels",

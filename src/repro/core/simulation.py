@@ -59,6 +59,11 @@ class SimConfig:
     # nodes with length-aware heavy-tail placement (DESIGN.md §11).
     n_store_nodes: int = 0
     placement_policy: str = "length_aware"  # "length_aware" | "hash"
+    # Replicated tier (DESIGN.md §12): r-way replication with health-aware
+    # failover; hedge_quantile > 0 arms speculative replica reads once a
+    # request outlives the tier's latency quantile. Monolith sims ignore both.
+    replication_factor: int = 1
+    hedge_quantile: float = 0.0
 
 
 class ProductionSim:
@@ -71,7 +76,9 @@ class ProductionSim:
             self.immutable: StoreProtocol = ShardedUIHStore(
                 self.schema, n_shards=cfg.n_shards,
                 n_nodes=cfg.n_store_nodes,
-                placement_policy=cfg.placement_policy)
+                placement_policy=cfg.placement_policy,
+                replication_factor=cfg.replication_factor,
+                hedge_quantile=cfg.hedge_quantile)
         else:
             self.immutable = ImmutableUIHStore(
                 self.schema, n_shards=cfg.n_shards)

@@ -21,6 +21,7 @@ from typing import Any, List, Optional
 
 import numpy as np
 
+from repro.core.backoff import Backoff
 from repro.core.materialize import Materializer
 from repro.data.feed import Feed
 from repro.data.spec import (
@@ -53,6 +54,18 @@ def compile_worker_plan(spec: DatasetSpec, sim: Any) -> WorkerPlan:
 
     return WorkerPlan(projection=spec.tenant, feature_spec=features,
                       schema=schema, make_materializer=make_materializer)
+
+
+def _retry_backoff(spec: DatasetSpec) -> Optional[Backoff]:
+    """Seeded deterministic backoff between a work item's crash-recovery
+    retries (the same shared helper the store failover executor uses): short
+    enough not to stall a healthy pool, long enough that the second retry of
+    a node-outage item usually lands after the flap, and a pure function of
+    the spec seed so chaos runs stay reproducible."""
+    if spec.max_item_retries <= 0:
+        return None
+    return Backoff(base_s=0.005, multiplier=2.0, max_s=0.1, jitter=0.5,
+                   seed=spec.reshuffle_seed or 0)
 
 
 def _batch_items(spec: DatasetSpec, sim: Any) -> List[list]:
@@ -227,6 +240,7 @@ def open_feed(
             backfill_from=sim.warehouse if spec.source.backfill else None,
             ordered=spec.ordered,
             max_item_retries=spec.max_item_retries,
+            retry_backoff=_retry_backoff(spec),
             emit_seq_start=base_batches,
             resume_filters=filters,
             backfill_start_hour=spec.source.backfill_start_hour,
@@ -265,7 +279,8 @@ def open_feed(
     pool = DPPWorkerPool.from_plan(plan, client, n_workers=spec.n_workers,
                                    controller=controller,
                                    ordered=spec.ordered,
-                                   max_item_retries=spec.max_item_retries)
+                                   max_item_retries=spec.max_item_retries,
+                                   retry_backoff=_retry_backoff(spec))
     pool.start(_skip_rows(_batch_items(spec, sim), base_rows))
     prefetcher = None
     inner = client

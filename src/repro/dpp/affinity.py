@@ -31,6 +31,14 @@ class AffinityPlan:
     expected_fanout: float            # avg distinct shards per item
     amortizable_pairs: int            # adjacent same-(user,window) example pairs
     expected_node_fanout: float = 1.0  # avg distinct store NODES per item
+    # replica-aware affinity tags: per work item, the ORDERED store-node
+    # chain that can serve it shard-locally — the primary the item was
+    # clustered on first, then the placement's round-robin replicas. A
+    # dispatcher can keep an item node-local THROUGH a node outage by
+    # falling down the chain instead of scattering the item. [(0,)] per item
+    # without a placement map (monolith) or at r=1.
+    item_replicas: List[Tuple[int, ...]] = dataclasses.field(
+        default_factory=list)
 
 
 def _tag_of(
@@ -75,7 +83,7 @@ def plan_affine(
     if run:
         items.append(run)
         tags.append(run_tags)
-    return _plan(items, tags)
+    return _plan(items, tags, placement)
 
 
 def plan_arrival_order(
@@ -92,12 +100,25 @@ def plan_arrival_order(
         for i in range(0, len(order), base_batch_size)
     ]
     tags = [[_tag_of(e, n_shards, placement) for e in item] for item in items]
-    return _plan(items, tags)
+    return _plan(items, tags, placement)
+
+
+def _replica_chain(
+    node: int, placement: Optional[PlacementMap]
+) -> Tuple[int, ...]:
+    """The ordered store-node chain serving a node-affine item: the same
+    round-robin anti-affinity rule ``PlacementMap.replicas_of`` uses, so the
+    chain names exactly the nodes that hold the item's bytes."""
+    if placement is None:
+        return (node,)
+    r = max(1, min(placement.replication_factor, placement.n_nodes))
+    return tuple((node + k) % placement.n_nodes for k in range(r))
 
 
 def _plan(
     items: List[List[TrainingExample]],
     tags: List[List[Tuple[int, int]]],
+    placement: Optional[PlacementMap] = None,
 ) -> AffinityPlan:
     fanouts = []
     node_fanouts = []
@@ -121,4 +142,8 @@ def _plan(
         expected_fanout=sum(fanouts) / max(len(fanouts), 1),
         amortizable_pairs=amortizable,
         expected_node_fanout=sum(node_fanouts) / max(len(node_fanouts), 1),
+        # the chain keys off the item's clustering tag (arrival-order items
+        # mixing nodes use their first example's node: fanout already >1)
+        item_replicas=[_replica_chain(item_tags[0][0], placement)
+                       for item_tags in tags],
     )

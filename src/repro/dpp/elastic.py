@@ -42,6 +42,8 @@ import threading
 import time
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core.backoff import Backoff
+
 
 @dataclasses.dataclass
 class ElasticConfig:
@@ -107,6 +109,7 @@ class DPPWorkerPool:
         on_place: Optional[Callable[[List], None]] = None,
         on_abandon: Optional[Callable[[List, BaseException], None]] = None,
         on_skip: Optional[Callable[[List], None]] = None,
+        retry_backoff: Optional["Backoff"] = None,
     ):
         self.worker_factory = worker_factory
         self.client = client
@@ -136,11 +139,22 @@ class DPPWorkerPool:
         # -- self-healing (see class docstring) -------------------------------
         self.max_item_retries = max_item_retries
         self.on_abandon = on_abandon
+        # seeded deterministic backoff between an item's retries (shared
+        # helper with the store failover path): the delay is a pure function
+        # of (seed, attempt, item seq), so chaos runs stay reproducible.
+        # None = immediate requeue (the historical behavior).
+        self.retry_backoff = retry_backoff
         self._seq = 0                       # next work-item sequence number
         # retried tasks go to the FRONT of the dispatch order (ahead of the
         # shared queue): with one worker this restores exact item order, with
         # N it minimizes reorder-buffer stall after a crash
         self._retry: Deque[Tuple[int, int, List]] = collections.deque()
+        # seq -> monotonic not-before time: the backoff delay of a requeued
+        # item, paid by the worker that CLAIMS the retry (the retry itself is
+        # visible in ``_retry`` immediately — an invisible in-flight retry
+        # could wedge ordered admission: every worker blocks in ``_admit`` on
+        # seqs past the crashed hole while nobody holds the hole's retry)
+        self._retry_ready: Dict[int, float] = {}
         self.worker_restarts = 0
         self.items_requeued = 0
         self.items_abandoned = 0
@@ -184,6 +198,15 @@ class DPPWorkerPool:
                         self._retire -= 1
                         return  # cooperative shrink: retire this thread
                     task = self._retry.popleft() if self._retry else None
+                    not_before = (self._retry_ready.pop(task[0], 0.0)
+                                  if task is not None else 0.0)
+                if task is not None and not_before:
+                    # claimed retry still inside its backoff window: THIS
+                    # thread owns it now (it counts in ``_live``, so the pool
+                    # cannot drain out underneath), so just wait it out
+                    remaining = not_before - time.monotonic()
+                    if remaining > 0:
+                        time.sleep(remaining)
                 if task is None:
                     try:
                         task = self._items.get(timeout=0.05)
@@ -254,6 +277,12 @@ class DPPWorkerPool:
             self._tombstone(seq, item)
         else:
             with self._lock:
+                if self.retry_backoff is not None:
+                    # seeded deterministic delay between this item's retries;
+                    # stamped as a not-before time and paid by the worker
+                    # that claims the retry (see ``_retry_ready``)
+                    self._retry_ready[seq] = time.monotonic() + \
+                        self.retry_backoff.delay(attempts - 1, token=seq)
                 self._retry.append((seq, attempts, item))
                 self.items_requeued += 1
         self._respawn()

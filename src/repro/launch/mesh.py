@@ -42,3 +42,17 @@ def store_node_of_host(host: int, n_hosts: int, n_store_nodes: int) -> int:
     if not 0 <= host < n_hosts:
         raise ValueError(f"host {host} out of range [0, {n_hosts})")
     return host % n_store_nodes
+
+
+def replica_nodes_of_host(host: int, n_hosts: int, n_store_nodes: int,
+                          replication_factor: int = 1) -> Tuple[int, ...]:
+    """Ordered store-node preference chain for a trainer host.
+
+    Head = the co-located node (``store_node_of_host``); tail = that node's
+    round-robin replica successors — the SAME anti-affinity chain
+    ``PlacementMap.replicas_of`` uses, so when the host's local node is down
+    its DPP reads fail over to nodes that actually replicate the local
+    node's primary data, instead of scattering across the tier."""
+    primary = store_node_of_host(host, n_hosts, n_store_nodes)
+    r = max(1, min(replication_factor, n_store_nodes))
+    return tuple((primary + k) % n_store_nodes for k in range(r))

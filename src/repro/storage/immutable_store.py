@@ -128,6 +128,9 @@ class LeaseStats:
     released: int = 0
     generations_retained: int = 0   # superseded generations kept for leases
     generations_gc: int = 0         # retained generations dropped at last release
+    lease_recoveries: int = 0       # node leases reconciled after a node death
+    #                                 (release fanned in while the node was
+    #                                 down; settled by ``recover()``)
 
 
 @dataclasses.dataclass
@@ -153,6 +156,14 @@ class IOStats:
     pinned_scans: int = 0       # scans served from a retained (leased) generation
     subsumed_hits: int = 0      # requests carved from a wider in-plan request
     #                             (union-projection planning, §2.3/§4.2.2)
+    # -- replicated-tier health counters (sharded client only, DESIGN.md §12) --
+    failovers: int = 0          # reads re-routed off their primary to a replica
+    hedged_reads: int = 0       # speculative replica reads fired on a slow node
+    hedge_wins: int = 0         # hedges that beat the primary round-trip
+    breaker_opens: int = 0      # circuit-breaker CLOSED/HALF_OPEN -> OPEN flips
+    degraded_scans: int = 0     # reads that failed on EVERY replica (retryable)
+    partial_reissues: int = 0   # failed node groups re-issued while completed
+    #                             sibling groups of the same plan were retained
 
     def snapshot(self) -> "IOStats":
         return dataclasses.replace(self)

@@ -20,6 +20,29 @@ interchangeable. The contract is behavioral, not just structural:
   * ``StaleGeneration`` remediation contract: scanning a generation that is
     neither live nor retained raises ``GenerationUnavailable`` (a
     ``KeyError``) so the Materializer's layered remediation works unchanged.
+
+**Failure model** (DESIGN.md §12): the contract distinguishes exactly two
+error classes on the read path, and every consumer is written against the
+distinction rather than against any concrete store:
+
+  * ``NodeUnavailable`` (an ``IOError``) — *the bytes still exist, the path
+    to them is down*. Retryable: the caller's work item fails cleanly with no
+    partial result, and an identical retry succeeds once a replica answers or
+    the node returns. The DPP pool's self-healing (requeue + respawn,
+    PR 5) is the designated handler.
+  * ``GenerationUnavailable`` (a ``KeyError``) — *the data is gone* (the
+    generation was GC'd everywhere). NOT retryable: the Materializer's
+    StaleGeneration remediation must re-resolve against a live generation.
+
+**Degraded-mode contract** (replicated tier, r-way): a store with replicas
+serves reads from any live replica — failover is invisible to the caller
+(same bytes, same ``StaleGeneration`` semantics, leases keep pinning on the
+survivors). Only when EVERY replica of a user's chain is unreachable does the
+read raise ``NodeUnavailable`` — still the retryable class, so training
+degrades to the PR 5 self-healing path (requeue, bounded retries, surfaced
+abandonment) and is byte-identical to a fault-free run once a replica
+returns within the retry budget. Degradation is never silent: the store
+counts ``degraded_scans`` and the pool surfaces abandonment.
 """
 from __future__ import annotations
 
@@ -36,6 +59,14 @@ from typing import (
 from repro.core import events as ev
 from repro.storage.immutable_store import IOStats, ScanPlan, ScanRequest
 from repro.storage.sharding import PlacementMap
+
+
+class NodeUnavailable(IOError):
+    """A store node (or, with replication, every replica in a user's chain)
+    is unreachable. Transient and retryable: the caller's work item fails
+    cleanly (no partial result is returned) and a retry after a replica or
+    the node returns succeeds — unlike ``GenerationUnavailable``, which means
+    the *data* is gone and remediation must re-resolve."""
 
 
 @runtime_checkable

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional
+from typing import Dict, Mapping, Optional, Tuple
 
 
 def shard_of(user_id: int, n_shards: int) -> int:
@@ -53,17 +53,34 @@ class PlacementMap:
     ``node_of_shard``); ``overrides`` pins the heavy tail explicitly. The map
     is immutable and carried per generation: the sharded store retains the map
     of every leased/retained generation so pinned scans route to where that
-    generation's bulk load actually put the bytes."""
+    generation's bulk load actually put the bytes.
+
+    **Replication** (``replication_factor`` = r): length-aware LPT placement
+    decides the PRIMARY only; the r-1 replicas follow round-robin from the
+    primary — ``(primary + k) % n_nodes`` for k in 1..r-1 — which is the
+    anti-affinity rule: consecutive offsets are distinct nodes, so no two
+    copies of a user's stripes ever share a node (for r <= n_nodes). The
+    chain is part of the placement map, i.e. generation metadata: a pinned
+    scan's failover targets are the replicas *that generation* loaded to."""
 
     n_nodes: int
     n_shards: int
     overrides: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    replication_factor: int = 1
 
     def node_of(self, user_id: int) -> int:
         node = self.overrides.get(int(user_id))
         if node is not None:
             return node
         return node_of_shard(shard_of(user_id, self.n_shards), self.n_nodes)
+
+    def replicas_of(self, user_id: int) -> Tuple[int, ...]:
+        """Ordered replica chain for a user: primary first, then the
+        round-robin anti-affine successors. Readers prefer the head; the
+        failover executor walks the tail."""
+        primary = self.node_of(user_id)
+        r = max(1, min(self.replication_factor, self.n_nodes))
+        return tuple((primary + k) % self.n_nodes for k in range(r))
 
     def shard_of(self, user_id: int) -> int:
         return shard_of(user_id, self.n_shards)

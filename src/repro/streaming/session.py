@@ -140,6 +140,7 @@ class StreamingSession:
         jagged: bool = True,
         ordered: bool = False,
         max_item_retries: int = 0,
+        retry_backoff=None,
         emit_seq_start: int = 0,
         resume_filters: Optional[List[ReplayFilter]] = None,
         backfill_start_hour: Optional[int] = None,
@@ -196,6 +197,7 @@ class StreamingSession:
             lambda: _AckingWorker(make_worker(), self),
             self.client, n_workers=n_workers, controller=controller,
             jagged=jagged, ordered=ordered, max_item_retries=max_item_retries,
+            retry_backoff=retry_backoff,
             on_place=self._on_place if track else None,
             on_abandon=self._on_abandon if max_item_retries > 0 else None,
             on_skip=self._on_skip if track else None,

@@ -3,6 +3,7 @@ layers that turn chaos scenarios into reproducible tests."""
 from repro.testing.faults import (
     ALL_KINDS,
     CONSUME_KINDS,
+    NODE_STATE_KINDS,
     SCAN_KINDS,
     DecodeCorruption,
     FaultPlan,
@@ -19,6 +20,7 @@ from repro.testing.faults import (
 __all__ = [
     "ALL_KINDS",
     "CONSUME_KINDS",
+    "NODE_STATE_KINDS",
     "SCAN_KINDS",
     "DecodeCorruption",
     "FaultPlan",

@@ -24,6 +24,18 @@ Injectable kinds:
                               disaggregated tier down and raises
                               ``NodeUnavailable`` (retryable: the node is back
                               for the retry, no lease is leaked);
+  * ``node_flap``           — store node ``spec.node`` goes DOWN at the Nth
+                              scan tick and comes back (``recover()``: missed
+                              loads replayed, orphan leases settled) after
+                              ``spec.duration`` further ticks. Requires the
+                              sharded tier; with replicas the flap is absorbed
+                              by failover, at r=1 it degrades to the retry
+                              path;
+  * ``node_slow``           — store node ``spec.node`` serves every round-trip
+                              ``spec.factor`` x slower for ``spec.duration``
+                              ticks (a stuck disk / hot neighbor, not an
+                              error): correctness is unaffected, hedged reads
+                              are the mitigation;
   * ``stream_disconnect``   — the Nth stream consume raises
                               ``StreamDisconnect`` (healed in place by
                               ``StreamingSource``).
@@ -40,11 +52,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.storage.sharded_store import NodeUnavailable
+from repro.storage.protocol import NodeUnavailable
 from repro.storage.stream import StreamDisconnect
 
 
@@ -65,19 +77,26 @@ class WorkerCrash(InjectedFault, RuntimeError):
 
 
 SCAN_KINDS = ("compaction_during_scan", "scan_ioerror", "decode_corruption",
-              "worker_crash", "node_unavailable")
+              "worker_crash", "node_unavailable", "node_flap", "node_slow")
 CONSUME_KINDS = ("stream_disconnect",)
 ALL_KINDS = SCAN_KINDS + CONSUME_KINDS
+# kinds that flip durable node health state instead of raising at the caller
+NODE_STATE_KINDS = ("node_flap", "node_slow")
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One scheduled fault: ``kind`` fires at 0-based tick ``at`` of its
     scope's operation counter (scan kinds count store scans, stream kinds
-    count consumes)."""
+    count consumes). ``node``/``duration``/``factor`` only apply to the
+    node-state kinds (``node_flap``, ``node_slow``): the state flips at tick
+    ``at`` and restores ``duration`` ticks later."""
 
     kind: str
     at: int
+    node: int = 0
+    duration: int = 2
+    factor: float = 8.0
 
     def __post_init__(self):
         if self.kind not in ALL_KINDS:
@@ -85,6 +104,12 @@ class FaultSpec:
                              f"one of {ALL_KINDS}")
         if self.at < 0:
             raise ValueError(f"fault tick must be >= 0, got {self.at}")
+        if self.kind in NODE_STATE_KINDS and self.duration < 1:
+            raise ValueError(
+                f"{self.kind} duration must be >= 1 tick, got {self.duration}")
+        if self.kind == "node_slow" and self.factor < 1.0:
+            raise ValueError(
+                f"node_slow factor must be >= 1, got {self.factor}")
 
 
 class FaultPlan:
@@ -97,9 +122,12 @@ class FaultPlan:
     def __init__(self, faults: Iterable[FaultSpec] = (),
                  on_compact: Optional[Callable[[], None]] = None):
         self.on_compact = on_compact
-        self._ticks: Dict[str, Set[int]] = {k: set() for k in ALL_KINDS}
+        # kind -> {tick: spec}: node-state kinds carry parameters, so the
+        # full spec is kept (iterating a kind's entry still yields ticks)
+        self._ticks: Dict[str, Dict[int, FaultSpec]] = {
+            k: {} for k in ALL_KINDS}
         for f in faults:
-            self._ticks[f.kind].add(f.at)
+            self._ticks[f.kind][f.at] = f
         self._counters = {"scan": 0, "consume": 0}
         self._lock = threading.Lock()
         self.fired: List[FaultSpec] = []
@@ -117,18 +145,20 @@ class FaultPlan:
             faults.extend(FaultSpec(kind, int(t)) for t in hits)
         return cls(faults, on_compact=on_compact)
 
-    def _fire(self, scope: str, kinds: Sequence[str]) -> List[FaultSpec]:
+    def _fire(self, scope: str,
+              kinds: Sequence[str]) -> Tuple[int, List[FaultSpec]]:
         with self._lock:
             t = self._counters[scope]
             self._counters[scope] = t + 1
-            due = [FaultSpec(k, t) for k in kinds if t in self._ticks[k]]
+            due = [self._ticks[k][t] for k in kinds if t in self._ticks[k]]
             self.fired.extend(due)
-            return due
+            return t, due
 
-    def scan_tick(self) -> List[FaultSpec]:
+    def scan_tick(self) -> Tuple[int, List[FaultSpec]]:
+        """Advance the scan-op counter; returns (tick, faults due at it)."""
         return self._fire("scan", SCAN_KINDS)
 
-    def consume_tick(self) -> List[FaultSpec]:
+    def consume_tick(self) -> Tuple[int, List[FaultSpec]]:
         return self._fire("consume", CONSUME_KINDS)
 
     @property
@@ -161,10 +191,50 @@ class _Delegate:
 class FaultyStore(_Delegate):
     """Wraps an ``ImmutableUIHStore``: every scan entry point first consults
     the plan (one tick per call — a batched multi-range scan is one remote
-    round-trip, hence one failure domain)."""
+    round-trip, hence one failure domain).
+
+    Node-state kinds (``node_flap``, ``node_slow``) do not raise here: they
+    flip durable health state on the wrapped SHARDED store
+    (``set_node_down``/``recover``/``set_node_slow``) and schedule their own
+    restore ``duration`` ticks later — the failure surfaces (or doesn't)
+    through the store's replica failover, exactly like production."""
+
+    _OWN = ("inner", "fault_plan", "_restores", "_restore_lock")
+
+    def __init__(self, inner, fault_plan: FaultPlan):
+        super().__init__(inner, fault_plan)
+        # [(restore_tick, fn)]: pending node-state restores
+        object.__setattr__(self, "_restores", [])
+        object.__setattr__(self, "_restore_lock", threading.Lock())
+
+    def _flip_node_state(self, f: FaultSpec) -> None:
+        store = self.inner
+        if not hasattr(store, "set_node_down"):
+            raise ValueError(
+                f"fault kind {f.kind!r} needs the sharded store tier "
+                f"(n_store_nodes > 0); got {type(store).__name__}")
+        if f.kind == "node_flap":
+            store.set_node_down(f.node)
+            restore = lambda n=f.node: store.recover(n)   # noqa: E731
+        else:   # node_slow
+            store.set_node_slow(f.node, f.factor)
+            restore = lambda n=f.node: store.set_node_slow(n, 1.0)  # noqa: E731
+        self._restores.append((f.at + f.duration, restore))
 
     def _maybe_fault(self) -> None:
-        for f in self.fault_plan.scan_tick():
+        tick, due = self.fault_plan.scan_tick()
+        with self._restore_lock:
+            # settle expired node-state faults BEFORE this tick's new ones:
+            # a flap scheduled [at, at + duration) is back up at restore time
+            still = [(at, fn) for at, fn in self._restores if tick < at]
+            expired = [fn for at, fn in self._restores if tick >= at]
+            self._restores[:] = still
+            for fn in expired:
+                fn()
+            for f in due:
+                if f.kind in NODE_STATE_KINDS:
+                    self._flip_node_state(f)
+        for f in due:
             if f.kind == "compaction_during_scan":
                 cb = self.fault_plan.on_compact
                 if cb is not None:
@@ -181,6 +251,18 @@ class FaultyStore(_Delegate):
             elif f.kind == "node_unavailable":
                 raise NodeUnavailable(
                     f"injected store-node outage (scan tick {f.at})")
+
+    def settle_node_state(self) -> int:
+        """Force-run node-state restores still pending (a flap/slow whose
+        restore tick was never reached because the run ended first); returns
+        how many were settled. Post-run audits that bypass the wrapper need
+        the tier healthy."""
+        with self._restore_lock:
+            pending = [fn for _at, fn in self._restores]
+            self._restores[:] = []
+        for fn in pending:
+            fn()
+        return len(pending)
 
     def scan(self, req):
         self._maybe_fault()
@@ -201,7 +283,8 @@ class FaultyStream(_Delegate):
     lost — the consumer reconnects and re-polls)."""
 
     def consume(self, timeout=None):
-        for f in self.fault_plan.consume_tick():
+        _tick, due = self.fault_plan.consume_tick()
+        for f in due:
             if f.kind == "stream_disconnect":
                 raise StreamDisconnect(
                     f"injected stream disconnect (consume tick {f.at})")

@@ -10,14 +10,16 @@ from repro.core.simulation import ProductionSim, SimConfig
 
 def make_sim(users=6, days=2, seed=0, req=3, mode="vlm", pin=False,
              capture_reference=True, stripe_len=16, events_mean=25.0,
-             n_items=1_500, extra_days=2, nodes=0):
+             n_items=1_500, extra_days=2, nodes=0, replication=1, hedge=0.0):
     """One standard traffic sim: ``days`` full production days of ``users``
     users at ``req`` requests/user/day (the event stream covers
     ``days + extra_days`` so later test-driven days have traffic to ingest).
     ``pin`` enables bifurcated-protocol generation pinning (streaming);
     ``capture_reference`` keeps the inference-time ground truth for audits.
     ``nodes > 0`` runs the immutable tier as a disaggregated
-    ``ShardedUIHStore`` over that many store nodes (0 = monolith)."""
+    ``ShardedUIHStore`` over that many store nodes (0 = monolith);
+    ``replication``/``hedge`` configure the replicated tier's r-way
+    replication and hedged-read quantile (ignored by the monolith)."""
     cfg = SimConfig(
         stream=ev.StreamConfig(n_users=users, n_items=n_items,
                                days=days + extra_days,
@@ -29,6 +31,8 @@ def make_sim(users=6, days=2, seed=0, req=3, mode="vlm", pin=False,
         seed=seed,
         pin_generations=pin,
         n_store_nodes=nodes,
+        replication_factor=replication,
+        hedge_quantile=hedge,
     )
     sim = ProductionSim(cfg)
     if days:

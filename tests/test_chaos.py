@@ -110,15 +110,28 @@ BATCH_FAULTS = {
                                FaultSpec("compaction_during_scan", 3)],
     "node_unavailable": [FaultSpec("node_unavailable", 1),
                          FaultSpec("node_unavailable", 4)],
+    "node_flap": [FaultSpec("node_flap", 1, node=1, duration=2),
+                  FaultSpec("node_flap", 4, node=3, duration=2)],
+    "node_slow": [FaultSpec("node_slow", 2, node=0, duration=3, factor=6.0)],
 }
+
+# fault kinds that need the disaggregated tier: (n_store_nodes, replication).
+# node_unavailable raises at the wrapper (the retry path heals it — r=1 shows
+# that path is still exercised); flap/slow flip REAL node health, so they run
+# replicated and the store's own failover is what absorbs them
+NODE_KINDS = {"node_unavailable": (4, 1), "node_flap": (4, 2),
+              "node_slow": (4, 2)}
+# kinds that surface as a dead worker healed by the DPP pool
+HEALED_KINDS = ("worker_crash", "scan_ioerror", "decode_corruption",
+                "node_unavailable")
 
 
 @pytest.mark.parametrize("kind", sorted(BATCH_FAULTS))
 def test_batch_fault_matrix_byte_identical_and_audit_clean(kind):
-    # a node outage only makes sense on the disaggregated tier: run that kind
+    # node-fault kinds only make sense on the disaggregated tier: run them
     # on a 4-node ShardedUIHStore (same scenario otherwise)
-    sim = make_sim(users=6, days=2, seed=5,
-                   nodes=4 if kind == "node_unavailable" else 0)
+    nodes, repl = NODE_KINDS.get(kind, (0, 1))
+    sim = make_sim(users=6, days=2, seed=5, nodes=nodes, replication=repl)
     spec = _spec(WarehouseSource(), consistency="audit")
     clean = _drain(open_feed(spec, sim))
     assert clean and _row_keys(clean) == _example_keys(sim.examples)
@@ -127,16 +140,21 @@ def test_batch_fault_matrix_byte_identical_and_audit_clean(kind):
         BATCH_FAULTS[kind],
         on_compact=lambda: sim.run_compaction(sim.compaction_watermark,
                                               evict=False))
-    feed = open_feed(spec, wrap_sim(sim, plan))
+    fsim = wrap_sim(sim, plan)
+    feed = open_feed(spec, fsim)
     chaos = _drain(feed)
     assert plan.n_fired == len(BATCH_FAULTS[kind])   # every fault really fired
+    fsim.immutable.settle_node_state()   # a flap/slow the run outlived
     _assert_batches_equal(clean, chaos)
     st = feed.stats()
-    if kind in ("worker_crash", "scan_ioerror", "decode_corruption",
-                "node_unavailable"):
+    if kind in HEALED_KINDS:
         assert st.workers.worker_restarts >= len(BATCH_FAULTS[kind])
         assert st.workers.items_requeued >= len(BATCH_FAULTS[kind])
-    if kind == "node_unavailable":   # zero leaked leases after the outage
+    if kind == "node_flap":   # r=2: replica failover absorbed the outage
+        assert sim.immutable.stats.failovers >= 1
+    if kind == "node_slow":   # slowness is never an error
+        assert sim.immutable.stats.degraded_scans == 0
+    if kind in NODE_KINDS:    # zero leaked leases after the outage
         assert sim.immutable.leased_generations() == {}
     _audit_clean(sim)
 
@@ -151,34 +169,40 @@ STREAM_FAULTS["stream_disconnect"] = [FaultSpec("stream_disconnect", 1),
                                       FaultSpec("stream_disconnect", 7)]
 
 
-def _stream_sim(seed=9, nodes=0):
-    sim = make_sim(users=6, days=2, seed=seed, pin=True, nodes=nodes)
+def _stream_sim(seed=9, nodes=0, replication=1):
+    sim = make_sim(users=6, days=2, seed=seed, pin=True, nodes=nodes,
+                   replication=replication)
     sim.stream.close()   # sealed backlog: the feed drains it and ends
     return sim
 
 
 @pytest.mark.parametrize("kind", sorted(STREAM_FAULTS))
 def test_streaming_fault_matrix_byte_identical_and_audit_clean(kind):
-    nodes = 4 if kind == "node_unavailable" else 0
+    nodes, repl = NODE_KINDS.get(kind, (0, 1))
     spec = _spec(StreamSource(), consistency="audit", generations="pinned")
-    sim_clean = _stream_sim(nodes=nodes)
+    sim_clean = _stream_sim(nodes=nodes, replication=repl)
     clean = _drain(open_feed(spec, sim_clean))
     assert clean and _row_keys(clean) == _example_keys(sim_clean.examples)
 
-    sim = _stream_sim(nodes=nodes)
+    sim = _stream_sim(nodes=nodes, replication=repl)
     plan = FaultPlan(
         STREAM_FAULTS[kind],
         on_compact=lambda: sim.run_compaction(sim.compaction_watermark,
                                               evict=False))
-    feed = open_feed(spec, wrap_sim(sim, plan))
+    fsim = wrap_sim(sim, plan)
+    feed = open_feed(spec, fsim)
     chaos = _drain(feed)
     assert plan.n_fired == len(STREAM_FAULTS[kind])
+    fsim.immutable.settle_node_state()
     _assert_batches_equal(clean, chaos)
-    # zero leaked generation leases after recovery
+    # zero leaked generation leases after recovery — pinned streaming runs
+    # hold leases THROUGH node faults, so this covers the fan-in path too
     assert sim.stream.pending_leases() == 0
     assert sim.immutable.leased_generations() == {}
     if kind == "stream_disconnect":
         assert feed.session.source.stats.reconnects == 2
+    if kind == "node_flap":
+        assert sim.immutable.stats.failovers >= 1
     _audit_clean(sim, pin=True)
 
 
@@ -201,6 +225,90 @@ def test_self_healing_two_worker_crashes_acceptance():
     assert st.workers.items_requeued >= 2
     assert sim.stream.pending_leases() == 0
     assert sim.immutable.leased_generations() == {}
+
+
+COMBINED_NODE_FAULTS = [
+    FaultSpec("node_flap", 1, node=1, duration=2),
+    FaultSpec("node_unavailable", 2),
+    FaultSpec("node_slow", 3, node=0, duration=2, factor=5.0),
+    FaultSpec("node_flap", 4, node=3, duration=2),
+]
+
+
+def test_combined_node_faults_batch_acceptance_r2():
+    """The PR's chaos acceptance: a 4-node r=2 tier hit by node loss, flap
+    AND slowness in one run — training completes with byte-identical batches,
+    zero abandoned rows, zero leaked leases, and the failover counters show
+    the replica path (not luck) absorbed the faults."""
+    sim = make_sim(users=6, days=2, seed=5, nodes=4, replication=2)
+    spec = _spec(WarehouseSource(), consistency="audit")
+    clean = _drain(open_feed(spec, sim))
+    assert clean
+
+    plan = FaultPlan(list(COMBINED_NODE_FAULTS))
+    fsim = wrap_sim(sim, plan)
+    feed = open_feed(spec, fsim)
+    chaos = _drain(feed)
+    assert plan.n_fired == len(COMBINED_NODE_FAULTS)
+    fsim.immutable.settle_node_state()
+    _assert_batches_equal(clean, chaos)
+    s = sim.immutable.stats
+    assert s.failovers >= 1
+    assert sim.immutable.leased_generations() == {}
+    ns = sim.immutable.node_stats()
+    assert not any(ns.down) and not any(ns.pending_replays)
+    _audit_clean(sim)
+
+
+def test_combined_node_faults_streaming_acceptance_r2():
+    """Same combined scenario, pinned streaming: generation leases are held
+    THROUGH the node faults (fan-in across a dead node), nothing is dropped,
+    nothing leaks, and the replayed flap loads leave every node whole."""
+    spec = _spec(StreamSource(), consistency="audit", generations="pinned")
+    clean = _drain(open_feed(spec, _stream_sim(nodes=4, replication=2)))
+    assert clean
+
+    sim = _stream_sim(nodes=4, replication=2)
+    plan = FaultPlan(list(COMBINED_NODE_FAULTS))
+    fsim = wrap_sim(sim, plan)
+    feed = open_feed(spec, fsim)
+    chaos = _drain(feed)
+    assert plan.n_fired == len(COMBINED_NODE_FAULTS)
+    fsim.immutable.settle_node_state()
+    _assert_batches_equal(clean, chaos)
+    assert feed.session.abandoned == 0            # zero abandoned rows
+    assert sim.stream.pending_leases() == 0       # zero leaked leases
+    assert sim.immutable.leased_generations() == {}
+    assert sim.immutable.stats.failovers >= 1
+    _audit_clean(sim, pin=True)
+
+
+def test_unreplicated_long_outage_degrades_loudly_and_recovers():
+    """r=1 contract: with no replica to fail over to, a node outage that
+    outlives the retry budget ABANDONS the affected items (surfaced via
+    ``session.abandoned`` + ``degraded_scans`` — never a silent drop), the
+    rest of the stream trains, and recovery leaves zero leaked leases."""
+    sim = _stream_sim(seed=9, nodes=4, replication=1)
+    victim_node = sim.immutable._node_of(sim.examples[0].user_id)
+    # the flap outlives the whole run: restores settle post-run
+    plan = FaultPlan([FaultSpec("node_flap", 0, node=victim_node,
+                                duration=10_000)])
+    spec = _spec(StreamSource(), generations="pinned", max_item_retries=1)
+    fsim = wrap_sim(sim, plan)
+    feed = open_feed(spec, fsim)
+    got = _drain(feed)
+    assert plan.n_fired == 1
+    abandoned = feed.session.abandoned
+    assert abandoned > 0                          # loud, not silent
+    rows = sum(len(b["user_id"]) for b in got)
+    assert rows == len(sim.examples) - abandoned  # survivors all trained
+    assert sim.immutable.stats.degraded_scans >= 1
+    assert feed.stats().workers.lease_recoveries >= abandoned
+    assert fsim.immutable.settle_node_state() == 1   # node comes back
+    assert sim.stream.pending_leases() == 0
+    assert sim.immutable.leased_generations() == {}
+    ns = sim.immutable.node_stats()
+    assert not any(ns.down) and not any(ns.pending_replays)
 
 
 def test_seeded_fault_plan_reproducible():

@@ -1,0 +1,461 @@
+"""Replicated store tier with health-aware failover (DESIGN.md §12).
+
+Covers the robustness PR's acceptance spine:
+  * seeded deterministic ``Backoff`` — golden values, bounds, decorrelation
+    by token, and the no-jitter exponential ladder;
+  * ``CircuitBreaker`` state machine — closed -> open -> probe half-open ->
+    close/reopen, driven by a fake clock (no sleeps);
+  * replica placement — ``PlacementMap.replicas_of`` anti-affinity, r-way
+    bulk-load fan-out, lease fan-in across node death (nothing leaks);
+  * the failover executor — pinned scans resolve on survivors, completed
+    sibling node groups are retained on a group failure (only the failed
+    group re-issues), hedged reads beat an injected-slow primary, and a
+    fully-degraded chain raises the *retryable* ``NodeUnavailable``;
+  * ``recover()`` — missed bulk loads replay in order, orphaned lease
+    releases settle, and reads are byte-identical after the node returns.
+"""
+import itertools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.backoff import Backoff
+from repro.storage.failover import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    CircuitBreaker,
+    LatencyTracker,
+)
+from repro.storage.immutable_store import GenerationUnavailable, ScanRequest
+from repro.storage.sharded_store import NodeUnavailable, ShardedUIHStore
+from repro.storage.sharding import PlacementMap
+
+from test_sharded_store import SCHEMA, _load_skewed, _views_equal
+
+
+def _store(r=2, **kw):
+    kw.setdefault("breaker_reset_s", 0.01)
+    return ShardedUIHStore(SCHEMA, n_shards=8, n_nodes=4,
+                           replication_factor=r, **kw)
+
+
+def _user_on(store, node, generation=-1):
+    return next(u for u in range(64)
+                if store._node_of(u, generation) == node)
+
+
+# ---------------------------------------------------------------------------
+# Backoff (shared helper: store failover + DPP heal)
+# ---------------------------------------------------------------------------
+
+def test_backoff_golden_values():
+    """Pinned literals: the jitter hash is part of the reproducibility
+    contract — chaos timing must be bitwise stable across runs AND releases,
+    so a change to the mixing shows up here, deliberately."""
+    b = Backoff(base_s=0.01, multiplier=2.0, max_s=0.08, jitter=0.5, seed=7)
+    got = [b.delay(a, token=3) for a in range(5)]
+    want = [0.009980539724, 0.019210703597, 0.03406879638,
+            0.049405271203, 0.044282890921]
+    assert got == pytest.approx(want, rel=1e-9, abs=1e-12)
+    assert [b.delay(a, token=4) for a in range(3)] == pytest.approx(
+        [0.007009669459, 0.017038642906, 0.030318774881],
+        rel=1e-9, abs=1e-12)
+
+
+def test_backoff_deterministic_and_bounded():
+    b = Backoff(base_s=0.004, multiplier=2.0, max_s=0.1, jitter=0.5, seed=11)
+    again = Backoff(base_s=0.004, multiplier=2.0, max_s=0.1, jitter=0.5,
+                    seed=11)
+    other_seed = Backoff(base_s=0.004, multiplier=2.0, max_s=0.1, jitter=0.5,
+                         seed=12)
+    for attempt, token in itertools.product(range(8), range(4)):
+        d = b.delay(attempt, token)
+        assert d == again.delay(attempt, token)      # pure function
+        raw = min(0.004 * 2.0 ** attempt, 0.1)
+        assert raw * 0.5 <= d <= raw                 # decrease-only jitter
+    # a different seed decorrelates (not a constant offset artifact)
+    assert any(b.delay(a, 0) != other_seed.delay(a, 0) for a in range(8))
+    # no-jitter ladder is the exact capped exponential
+    nb = Backoff(base_s=0.01, multiplier=2.0, max_s=0.08, jitter=0.0)
+    assert [nb.delay(a) for a in range(5)] == [0.01, 0.02, 0.04, 0.08, 0.08]
+
+
+def test_backoff_validation():
+    with pytest.raises(ValueError):
+        Backoff(base_s=-1.0)
+    with pytest.raises(ValueError):
+        Backoff(multiplier=0.5)
+    with pytest.raises(ValueError):
+        Backoff(jitter=1.5)
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker state machine (fake clock, no sleeps)
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    now = [0.0]
+    br = CircuitBreaker(threshold=3, reset_s=1.0, clock=lambda: now[0])
+    assert br.state == CLOSED
+    assert not br.record_failure()
+    assert not br.record_failure()
+    assert br.state == CLOSED          # below threshold: still admitting
+    assert br.allow()
+    assert br.record_failure()         # 3rd consecutive failure opens
+    assert br.state == OPEN and br.opens == 1
+    assert not br.allow()              # open sheds instantly
+    now[0] = 2.0                       # past reset_s
+    assert br.allow()                  # -> half-open, ONE probe admitted
+    assert br.state == HALF_OPEN
+    assert not br.allow()              # second concurrent probe is shed
+    assert br.record_failure()         # probe failed: reopen (counted)
+    assert br.state == OPEN and br.opens == 2
+    now[0] = 4.0
+    assert br.allow()
+    br.record_success()                # probe succeeded: close + reset count
+    assert br.state == CLOSED
+    assert not br.record_failure()     # consecutive count restarted
+    br.reset()
+    assert br.state == CLOSED
+
+
+def test_circuit_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(threshold=2, reset_s=1.0, clock=lambda: 0.0)
+    br.record_failure()
+    br.record_success()
+    assert not br.record_failure()     # 1 consecutive, not 2
+    assert br.state == CLOSED
+
+
+def test_latency_tracker_cold_then_quantile():
+    tr = LatencyTracker(window=32, min_samples=4)
+    for s in (0.01, 0.02):
+        tr.record(s)
+    assert tr.quantile(0.9) is None    # cold: hedging must stay off
+    for s in (0.03, 0.04):
+        tr.record(s)
+    assert tr.quantile(0.0) == 0.01
+    assert tr.quantile(0.99) == 0.04
+    assert tr.observed_at_least(0.03) == 2
+
+
+# ---------------------------------------------------------------------------
+# replica placement + replicated bulk load
+# ---------------------------------------------------------------------------
+
+def test_replicas_of_anti_affinity():
+    pm = PlacementMap(4, 8, {5: 2}, replication_factor=3)
+    for u in range(40):
+        chain = pm.replicas_of(u)
+        assert len(chain) == 3
+        assert len(set(chain)) == 3            # all distinct nodes
+        assert chain[0] == pm.node_of(u)       # primary heads the chain
+        assert chain == tuple((chain[0] + k) % 4 for k in range(3))
+    assert pm.replicas_of(5)[0] == 2           # override places the primary
+    # r=1 degenerates to the primary alone
+    assert PlacementMap(4, 8, {}).replicas_of(9) == \
+        (PlacementMap(4, 8, {}).node_of(9),)
+
+
+def test_bulk_load_installs_on_every_replica():
+    solo = _store(r=1)
+    repl = _store(r=2)
+    _load_skewed(solo, generation=0)
+    _load_skewed(repl, generation=0)
+    # r=2 stores every stripe twice — and on the chain's nodes exactly
+    assert repl.stored_bytes() == 2 * solo.stored_bytes()
+    pm = repl.live_placement()
+    for u in (3, 5, 11):
+        chain = pm.replicas_of(u)
+        for nid in chain:
+            assert repl.nodes[nid].stored_events(u, "core") > 0
+        for nid in set(range(4)) - set(chain):
+            assert repl.nodes[nid].stored_events(u, "core") == 0
+    solo.close()
+    repl.close()
+
+
+# ---------------------------------------------------------------------------
+# failover executor: scans survive node loss
+# ---------------------------------------------------------------------------
+
+def test_scan_fails_over_to_replica_byte_identical():
+    store = _store(r=2)
+    _load_skewed(store, generation=0)
+    victim = _user_on(store, 2)
+    want = store.scan(ScanRequest(victim, "core", 0, 10**9))
+    store.set_node_down(2)
+    got = store.scan(ScanRequest(victim, "core", 0, 10**9))
+    _views_equal(want, got, "failover scan")
+    assert store.stats.failovers >= 1
+    assert store.stats.degraded_scans == 0
+    store.close()
+
+
+def test_planned_reads_survive_node_loss_and_heal_counters():
+    """The whole materialize path (plan -> execute) stays available with a
+    node down at r=2, and after enough failures the breaker opens so later
+    reads skip the dead primary without paying a failure per call."""
+    store = _store(r=2, breaker_threshold=2)
+    _load_skewed(store, generation=0)
+    reqs = [ScanRequest(u, "core", 0, 10**9) for u in range(16)]
+    want = store.multi_range_scan(reqs)
+    store.set_node_down(1)
+    got = store.multi_range_scan(reqs)
+    for i, (a, b) in enumerate(zip(want, got)):
+        _views_equal(a, b, f"req {i}")
+    s = store.stats
+    assert s.failovers >= 1
+    # keep reading: the second pass trips the consecutive-failure breaker
+    store.multi_range_scan(reqs)
+    ns = store.node_stats()
+    assert ns.down[1] and ns.breaker[1] in (OPEN, HALF_OPEN)
+    assert store.stats.breaker_opens >= 1
+    store.close()
+
+
+def test_pinned_scan_fails_over_to_surviving_retainer():
+    """A pinned generation must be served by whichever replica still holds
+    the bytes — GenerationUnavailable on one replica consults the next
+    instead of surfacing remediation while a survivor retains the data."""
+    store = _store(r=2)
+    _load_skewed(store, generation=0)
+    lease = store.acquire_lease()
+    victim = _user_on(store, 0, generation=0)
+    want = store.scan(ScanRequest(victim, "core", 0, 10**9, generation=0))
+    _load_skewed(store, generation=1)      # flip; gen 0 lease-retained
+    store.set_node_down(0)
+    got = store.scan(ScanRequest(victim, "core", 0, 10**9, generation=0))
+    _views_equal(want, got, "pinned failover")
+    assert store.stats.failovers >= 1
+    lease.release()
+    store.close()
+
+
+def test_all_replicas_down_raises_retryable_and_recovers():
+    """Degraded mode: every replica of a group down -> NodeUnavailable (the
+    RETRYABLE class — the DPP self-healing loop owns the wait), never a
+    silent drop or a KeyError remediation; byte-identical after recovery."""
+    store = _store(r=2, max_group_retries=1,
+                   backoff=Backoff(base_s=0.0, jitter=0.0))
+    _load_skewed(store, generation=0)
+    victim = _user_on(store, 1)
+    want = store.scan(ScanRequest(victim, "core", 0, 10**9))
+    store.set_node_down(1)
+    store.set_node_down(2)                 # 1's replica successor
+    with pytest.raises(NodeUnavailable) as ei:
+        store.scan(ScanRequest(victim, "core", 0, 10**9))
+    assert not isinstance(ei.value, KeyError)
+    assert store.stats.degraded_scans == 1
+    store.set_node_down(1, down=False)
+    store.set_node_down(2, down=False)
+    got = store.scan(ScanRequest(victim, "core", 0, 10**9))
+    _views_equal(want, got, "post-recovery scan")
+    store.close()
+
+
+def test_partial_reissue_retains_completed_siblings():
+    """Satellite 6 regression: one node group failing transiently must NOT
+    re-run its completed siblings — the failed group re-issues alone
+    (``partial_reissues``), results stay correct, and sibling node IOStats
+    are not double-counted."""
+    store = _store(r=1, backoff=Backoff(base_s=0.0, jitter=0.0))
+    _load_skewed(store, generation=0)
+    users = [_user_on(store, n) for n in range(4)]
+    reqs = [ScanRequest(u, "core", 0, 10**9) for u in users]
+    want = [store.nodes[store._node_of(u)].scan(
+        ScanRequest(u, "core", 0, 10**9)) for u in users]
+    baseline = {n: store.nodes[n].stats.requests for n in range(4)}
+
+    flaky = store._node_of(users[2])
+    inner = store.nodes[flaky].multi_range_scan
+    fails = [1]
+
+    def flaky_scan(rs, stats=None):
+        if fails[0]:
+            fails[0] -= 1
+            raise NodeUnavailable(f"injected transient on node {flaky}")
+        return inner(rs, stats)
+
+    store.nodes[flaky].multi_range_scan = flaky_scan
+    out = store.multi_range_scan(reqs)
+    for i, (a, b) in enumerate(zip(want, out)):
+        _views_equal(a, b, f"req {i}")
+    s = store.stats
+    assert s.partial_reissues == 1
+    assert s.degraded_scans == 0
+    # every node group ran EXACTLY once: siblings were never re-issued, and
+    # the flaky group's failed attempt died before reaching the node, so its
+    # single physical request is the successful re-issue (no double counting)
+    for n in range(4):
+        ran = store.nodes[n].stats.requests - baseline[n]
+        assert ran == 1, (n, ran)
+    store.close()
+
+
+def test_breakers_open_then_probe_heals_after_recovery():
+    """After the outage ends, the open breaker's half-open probe readmits
+    the primary — reads return home without an administrative reset."""
+    store = _store(r=2, breaker_threshold=1, breaker_reset_s=0.0,
+                   max_group_retries=0)
+    _load_skewed(store, generation=0)
+    victim = _user_on(store, 3)
+    req = ScanRequest(victim, "core", 0, 10**9)
+    store._down[3] = True                  # raw flag: recovery via probe only
+    store.scan(req)                        # trips breaker, serves via replica
+    assert store.node_stats().breaker[3] == OPEN
+    store._down[3] = False
+    base = store.nodes[3].stats.requests
+    for _ in range(4):
+        store.scan(req)                    # reset_s=0: probe fires right away
+    assert store.node_stats().breaker[3] == CLOSED
+    assert store.nodes[3].stats.requests > base   # primary serving again
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# hedged reads
+# ---------------------------------------------------------------------------
+
+def test_hedged_read_beats_slow_primary():
+    store = _store(r=2, hedge_quantile=0.5)
+    _load_skewed(store, generation=0)
+    victim = _user_on(store, 0)
+    req = ScanRequest(victim, "core", 0, 10**9)
+    want = store.scan(req)
+    for _ in range(20):                    # warm the latency tracker
+        store.scan(req)
+    assert store.stats.hedged_reads == 0   # healthy tier: no hedges fired
+    store.set_node_slow(0, 400.0)
+    got = store.scan(req)
+    _views_equal(want, got, "hedged scan")
+    s = store.stats
+    assert s.hedged_reads >= 1
+    assert s.hedge_wins >= 1
+    assert s.failovers == 0                # hedge is not a failover
+    store.close()
+
+
+def test_hedging_off_below_min_samples():
+    store = _store(r=2, hedge_quantile=0.5)
+    _load_skewed(store, generation=0)
+    victim = _user_on(store, 0)
+    store.set_node_slow(0, 50.0)
+    store.scan(ScanRequest(victim, "core", 0, 10**9))   # cold tracker
+    assert store.stats.hedged_reads == 0
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# lease fan-in + recover() re-replication
+# ---------------------------------------------------------------------------
+
+def test_lease_fanin_parks_orphan_on_dead_node_and_recovers():
+    """A node dying while leased leaks nothing: release fans in across the
+    survivors, the dead node's release parks as an orphan
+    (``lease_recoveries``), and recover() settles it so the node's retained
+    copy GCs exactly like the survivors'."""
+    store = _store(r=2)
+    _load_skewed(store, generation=0)
+    lease = store.acquire_lease()
+    _load_skewed(store, generation=1)      # gen 0 now lease-retained
+    store.set_node_down(2)
+    lease.release()
+    assert store.leased_generations() == {}            # logical refs drained
+    assert store.lease_stats.lease_recoveries == 1
+    for nid, node in enumerate(store.nodes):
+        if nid == 2:
+            assert node.has_generation(0)  # orphan: retained until recover
+        else:
+            assert not node.has_generation(0)
+    store.recover(2)
+    assert not store.nodes[2].has_generation(0)        # orphan settled
+    assert store.retained_generations() == []          # nothing lease-held
+    assert store.has_generation(1)                     # live gen intact
+    store.close()
+
+
+def test_recover_replays_missed_loads_in_order():
+    store = _store(r=2)
+    _load_skewed(store, generation=0)
+    store.set_node_down(1)
+    _load_skewed(store, generation=1, torso_n=40)      # node 1 misses this
+    assert store.node_stats().pending_replays[1] == 1
+    assert store.nodes[1].generation == 0
+    victim = _user_on(store, 1)
+    want = store.scan(ScanRequest(victim, "core", 0, 10**9))  # via replica
+    replayed = store.recover(1)
+    assert replayed == 1
+    assert store.rereplications == 1
+    assert store.rereplicated_bytes > 0
+    assert store.nodes[1].generation == 1
+    got = store.nodes[1].scan(ScanRequest(victim, "core", 0, 10**9))
+    _views_equal(want, got, "replayed load")
+    assert store.node_stats().pending_replays[1] == 0
+    store.close()
+
+
+def test_acquire_lease_skips_down_node_and_all_down_is_retryable():
+    store = _store(r=2)
+    _load_skewed(store, generation=0)
+    store.set_node_down(0)
+    with store.acquire_lease() as lease:
+        assert lease.generation == 0       # survivors pin consistently
+    for nid in range(1, 4):
+        store.set_node_down(nid)
+    with pytest.raises(NodeUnavailable):
+        store.acquire_lease()
+    assert store.leased_generations() == {}
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# DPP heal + backoff: the pool survives a retry whose delay is still elapsing
+# ---------------------------------------------------------------------------
+
+def test_dpp_pool_retry_backoff_drains_without_deadlock():
+    """Regression: while a healed item's backoff delay elapses, the retry is
+    in neither the queue nor the retry deque — the pool (workers AND the
+    ordered placer) must stay open for it instead of draining out and
+    wedging join() forever."""
+    from repro.dpp.elastic import DPPWorkerPool
+
+    placed = []
+    crashed = []
+
+    class _Worker:
+        def __init__(self):
+            self.stats = type("S", (), {"busy_time_s": 0.0,
+                                        "total_time_s": 0.0})()
+
+        def process(self, item):
+            if item[0] == "poison" and not crashed:
+                crashed.append(True)
+                raise IOError("injected mid-item crash")
+            return list(item)
+
+    class _Client:
+        def put(self, out):
+            placed.append(out)
+
+        def close(self):
+            pass
+
+    pool = DPPWorkerPool(
+        _Worker, _Client(), n_workers=2, max_item_retries=2, ordered=True,
+        retry_backoff=Backoff(base_s=0.05, multiplier=1.0, jitter=0.0))
+    # MORE items than the reorder-buffer admission cap (8 for 2 workers):
+    # while the poison item's backoff elapses, the other workers run ahead
+    # and block in admission on far seqs — the retry must still find a thread
+    items = [["a"], ["poison"]] + [[f"x{i}"] for i in range(14)]
+    pool.start(items)
+    t = threading.Thread(target=pool.join, daemon=True)
+    t.start()
+    t.join(timeout=30.0)
+    assert not t.is_alive(), "pool.join() wedged on the in-flight retry"
+    assert placed == items                 # ordered, byte-identical, complete
+    assert pool.items_requeued == 1
+    assert pool.worker_restarts == 1
