@@ -34,14 +34,26 @@ MODULES = [
 ]
 
 
-def run_module(modname: str, quick: bool = False):
-    """Import + execute one benchmark module, honoring ``quick`` if it does."""
+def run_module(modname: str, quick: bool = False, telemetry=None):
+    """Import + execute one benchmark module, honoring the ``quick`` and
+    ``telemetry`` knobs if its ``run`` accepts them."""
     import importlib
 
     mod = importlib.import_module(modname)
-    if quick and "quick" in inspect.signature(mod.run).parameters:
-        return mod.run(quick=True)
-    return mod.run()
+    params = inspect.signature(mod.run).parameters
+    kw = {}
+    if quick and "quick" in params:
+        kw["quick"] = True
+    if telemetry is not None and "telemetry" in params:
+        kw["telemetry"] = telemetry
+    return mod.run(**kw)
+
+
+def _headline(derived: dict) -> dict:
+    """The trajectory-worthy subset of a result's derived dict: throughput
+    (rows/s) and tail-latency (p99) figures."""
+    return {k: v for k, v in derived.items()
+            if "rows_per_s" in k or "p99" in k}
 
 
 def main() -> None:
@@ -49,6 +61,12 @@ def main() -> None:
     quick = "--quick" in args
     if quick:
         args.remove("--quick")
+    telemetry = None
+    if "--telemetry" in args:
+        args.remove("--telemetry")
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry()
     only = args[0] if args else None
     all_results = []
     failures = []
@@ -58,7 +76,7 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            results = run_module(modname, quick=quick)
+            results = run_module(modname, quick=quick, telemetry=telemetry)
         except Exception as e:
             failures.append(modname)
             print(f"{modname},ERROR,{type(e).__name__}: {e}", flush=True)
@@ -70,11 +88,35 @@ def main() -> None:
                                 "derived": r.derived})
         print(f"# {modname} done in {time.time() - t0:.1f}s", flush=True)
 
+    if telemetry is not None:
+        # export the run's metrics/spans/events for `python -m repro.obs.report`
+        run_dir = Path(__file__).parent / "telemetry"
+        run_dir.mkdir(exist_ok=True)
+        telemetry.write_run_dir(run_dir)
+        print(f"# telemetry run dir: {run_dir}", flush=True)
+
     # persist only complete full-mode sweeps: quick numbers are smoke-test
     # noise, and a filtered run would clobber every other module's results
     if not quick and not only:
         out = Path(__file__).parent / "results.json"
         out.write_text(json.dumps(all_results, indent=1, default=str))
+        # machine-readable perf trajectory: APPEND one entry per full sweep
+        # (bench name -> headline rows/s + p99 figures) so regressions are
+        # diffable across commits without parsing CSV logs
+        obs = Path(__file__).parent / "BENCH_OBS.json"
+        try:
+            traj = json.loads(obs.read_text()) if obs.exists() else []
+            if not isinstance(traj, list):
+                traj = []
+        except (ValueError, OSError):
+            traj = []
+        traj.append({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
+            "results": {r["name"]: {"us_per_call": r["us_per_call"],
+                                    **_headline(r["derived"])}
+                        for r in all_results},
+        })
+        obs.write_text(json.dumps(traj, indent=1, default=str))
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -205,6 +205,12 @@ def open_feed(
     exhaustion + ``join()``).
     """
     plan = compile_worker_plan(spec, sim)
+    tel = spec.telemetry
+    if tel is not None:
+        # attach to the store tier FIRST (generation flips / lease events /
+        # breaker listeners / RTT histogram re-home); reaches the real store
+        # through fault-injection wrappers, whose __setattr__ delegates
+        sim.immutable.telemetry = tel
     # prefetch_depth=None means auto (device stage iff a cell is targeted);
     # an explicit 0 FORCES the host feed even with a cell
     depth = (spec.prefetch_depth if spec.prefetch_depth is not None
@@ -252,6 +258,8 @@ def open_feed(
             # resume cursor reads every emitted batch's row count from it
             # (prep_fn may reshape batches)
             session.client.track_emitted_rows = True
+        if tel is not None:
+            session.telemetry = tel    # before start(): spans ride the FIFOs
         session.start()
         prefetcher = None
         inner: Any = session
@@ -260,6 +268,8 @@ def open_feed(
 
             prefetcher = DevicePrefetcher(session, depth=depth,
                                           sharding=sharding, prep_fn=prep_fn)
+            if tel is not None:
+                prefetcher.telemetry = tel
             inner = prefetcher
         resume_meta = None
         if spec.ordered and session.coordinator is not None:
@@ -267,7 +277,8 @@ def open_feed(
                            "base_rows": base_rows,
                            "base_batches": base_batches}
         return Feed(inner, session=session, prefetcher=prefetcher,
-                    prep_fn=prep_fn, spec=spec, resume_meta=resume_meta)
+                    prep_fn=prep_fn, spec=spec, resume_meta=resume_meta,
+                    telemetry=tel, store=sim.immutable)
 
     client = RebatchingClient(spec.batch_size,
                               buffer_batches=spec.buffer_batches,
@@ -276,11 +287,14 @@ def open_feed(
     # BEFORE the pool starts: the Feed's resume cursor reads every emitted
     # batch's row count from this FIFO (prep_fn may reshape batches)
     client.track_emitted_rows = spec.ordered
+    client.telemetry = tel
     pool = DPPWorkerPool.from_plan(plan, client, n_workers=spec.n_workers,
                                    controller=controller,
                                    ordered=spec.ordered,
                                    max_item_retries=spec.max_item_retries,
                                    retry_backoff=_retry_backoff(spec))
+    if tel is not None:
+        pool.telemetry = tel           # before start(): items mint spans
     pool.start(_skip_rows(_batch_items(spec, sim), base_rows))
     prefetcher = None
     inner = client
@@ -289,6 +303,8 @@ def open_feed(
 
         prefetcher = DevicePrefetcher(client, depth=depth, sharding=sharding,
                                       prep_fn=prep_fn)
+        if tel is not None:
+            prefetcher.telemetry = tel
         inner = prefetcher
     resume_meta = None
     if spec.ordered:
@@ -298,4 +314,5 @@ def open_feed(
         if isinstance(spec.source, WarehouseSource):
             resume_meta["hour_rows"] = _warehouse_hour_rows(spec, sim)
     return Feed(inner, client=client, pool=pool, prefetcher=prefetcher,
-                prep_fn=prep_fn, spec=spec, resume_meta=resume_meta)
+                prep_fn=prep_fn, spec=spec, resume_meta=resume_meta,
+                telemetry=tel, store=sim.immutable)

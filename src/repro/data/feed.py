@@ -30,17 +30,24 @@ import threading
 import time
 from typing import Any, Deque, Dict, Iterator, Optional
 
+from repro.core.materialize import TenantShareStats
 from repro.dpp.client import ClientStats
+from repro.dpp.worker import WorkerStats
+from repro.streaming.session import FreshnessStats
 
 
 @dataclasses.dataclass
 class FeedStats:
-    """Composite snapshot of one feed's counters (see DESIGN.md §6/§9)."""
+    """Composite snapshot of one feed's counters (see DESIGN.md §6/§9).
+
+    Every member is a consistent point-in-time COPY taken by
+    ``Feed.snapshot()`` — mutating a ``FeedStats`` never writes through to
+    the live pipeline counters."""
 
     client: ClientStats
-    workers: Optional[object] = None     # merged repro.dpp.worker.WorkerStats
-    freshness: Optional[object] = None   # streaming FreshnessStats (else None)
-    share: Optional[object] = None       # TenantShareStats (co-scan feeds)
+    workers: Optional[WorkerStats] = None     # merged across pool workers
+    freshness: Optional[FreshnessStats] = None  # streaming feeds only
+    share: Optional[TenantShareStats] = None    # co-scan feeds only
     peak_workers: int = 0
     stale_dropped: int = 0               # streaming protocol drops
 
@@ -91,8 +98,16 @@ class Feed:
         spec=None,
         share_stats=None,
         resume_meta=None,
+        telemetry=None,
+        store=None,
     ):
         self._inner = inner
+        # per-run repro.obs.Telemetry (None = off): the Feed is the delivery
+        # and train end of the span pipeline, and publishes the final
+        # composite counters into the metrics registry on close()
+        self.telemetry = telemetry
+        # the store the feed scans (telemetry publish on close)
+        self.store = store
         self.client = client if client is not None else getattr(
             session, "client", None)
         self.pool = pool if pool is not None else getattr(
@@ -147,6 +162,10 @@ class Feed:
             out = self._inner.get_full_batch(timeout=timeout, record=record)
             if out is not None and self._prep_fn is not None:
                 out = self._prep_fn(out)
+        if out is not None and record and self.telemetry is not None:
+            # pop the span FIFO's delivery side (record=False drains bypass
+            # this on purpose — SpanTracker.drain() accounts those batches)
+            self.telemetry.spans.mark_delivered()
         if out is not None and record and self._resume_meta is not None:
             # row count from the CLIENT's emission FIFO, not the delivered
             # batch: a prep_fn may reshape batches (e.g. pre-split grad-accum
@@ -200,6 +219,8 @@ class Feed:
         rec = getattr(self._inner, "record_train_step", None)
         if rec is not None:
             rec(seconds)
+        if self.telemetry is not None:
+            self.telemetry.spans.record_train(seconds)
 
     def recycle(self, batch) -> None:
         rec = getattr(self._inner, "recycle", None)
@@ -240,6 +261,40 @@ class Feed:
             peak_workers=getattr(self.pool, "peak_workers", 0),
             stale_dropped=getattr(self.session, "stale_dropped", 0),
         )
+
+    def publish_telemetry(self) -> None:
+        """Flush the composite counters into the telemetry registry and close
+        out spans still riding the FIFOs. Idempotent (the registry adapters
+        take monotone maxima); called by ``close()``, callable any time for a
+        mid-run flush."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        snap = self.snapshot()
+        tel.publish_stats(snap.client, "client")
+        if snap.workers is not None:
+            tel.publish_stats(snap.workers, "worker")
+        if snap.freshness is not None:
+            tel.publish_stats(snap.freshness, "freshness")
+        if snap.share is not None:
+            tel.publish_stats(snap.share, "share")
+        tel.registry.gauge(
+            "repro_feed_peak_workers",
+            help="peak concurrent DPP workers").set(snap.peak_workers)
+        tel.registry.counter(
+            "repro_feed_stale_dropped_total",
+            help="streaming protocol drops").set_total(snap.stale_dropped)
+        if self.session is not None:
+            src = getattr(self.session, "source", None)
+            if src is not None:
+                tel.publish_stats(src.stats, "source")
+            coord = getattr(self.session, "coordinator", None)
+            if coord is not None:
+                tel.publish_stats(coord.stats, "backfill",
+                                  gauge_fields=("watermark",))
+        pub = getattr(self.store, "publish_telemetry", None)
+        if pub is not None:
+            pub()
 
     # -- crash-safe checkpoint (§10) --------------------------------------------
     @property
@@ -324,6 +379,17 @@ class Feed:
         if self._closed:
             return
         self._closed = True
+        try:
+            self._close_inner(timeout)
+        finally:
+            if self.telemetry is not None:
+                # close out spans still riding the FIFOs, then flush the
+                # final composite counters — even when join() re-raises a
+                # pipeline error (chaos runs must still report)
+                self.telemetry.spans.drain()
+                self.publish_telemetry()
+
+    def _close_inner(self, timeout: Optional[float]) -> None:
         self.stop()
         if self.session is not None:
             self.session.close(timeout=timeout)

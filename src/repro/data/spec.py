@@ -120,6 +120,13 @@ class DatasetSpec:
     # exception is immediately fatal (the pre-§10 behavior)
     ordered: bool = True
     max_item_retries: int = 3
+    # unified telemetry (§13): a ``repro.obs.Telemetry`` threaded by
+    # ``open_feed`` through every pipeline stage (store RTT histograms, item
+    # spans, control-plane events). Excluded from equality/hash/repr — an
+    # observer is not dataset identity (and resume_fingerprint must not see
+    # it; it builds from repr'd identity fields only).
+    telemetry: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False, hash=False)
 
     def __post_init__(self):
         if self.consistency not in _CONSISTENCY:

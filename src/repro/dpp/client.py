@@ -30,6 +30,7 @@ from typing import Deque, Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.dpp.featurize import JaggedFeatures, merge_base_batches, reshuffle
+from repro.obs.spans import current_span
 
 
 @dataclasses.dataclass
@@ -61,7 +62,8 @@ class _Slot:
     landed, so the memory-bandwidth work itself runs outside the lock.
     """
 
-    __slots__ = ("arrays", "filled", "writers", "emitted", "inv", "emit_seq")
+    __slots__ = ("arrays", "filled", "writers", "emitted", "inv", "emit_seq",
+                 "spans")
 
     def __init__(self, arrays: Dict[str, np.ndarray], inv: Optional[np.ndarray],
                  emit_seq: int):
@@ -71,6 +73,8 @@ class _Slot:
         self.emitted = False
         self.inv = inv          # arrival row -> slot row (None = identity)
         self.emit_seq = emit_seq
+        # item spans whose rows landed here (telemetry only; see DESIGN §13)
+        self.spans: List = []
 
 
 class RebatchingClient:
@@ -116,6 +120,10 @@ class RebatchingClient:
         # consumer never accrete it.
         self.track_emitted_rows = False
         self.emitted_rows: Deque[int] = collections.deque()
+        # optional per-run telemetry (repro.obs.Telemetry): the emit point —
+        # each committed slot's contributing item spans become a BatchSpan
+        # riding a FIFO parallel to the output queue
+        self.telemetry = None
         # end-of-stream sentinel observed by the consumer: lets a wall-clock-
         # bounded trainer distinguish "stream over" from "get timed out"
         self.ended = False
@@ -191,6 +199,11 @@ class RebatchingClient:
             # consumer and producers must not hold the slot lock meanwhile
             if self.track_emitted_rows:
                 self.emitted_rows.append(self.full_batch_size)
+            if self.telemetry is not None:
+                # slot.spans is frozen here: the slot is fully reserved and
+                # its last writer just committed
+                self.telemetry.spans.emit_batch(
+                    slot.emit_seq, slot.spans, self.full_batch_size)
             self._q.put(slot.arrays)
 
     def _place(self, rows: int, template_fn, write_fn) -> None:
@@ -209,6 +222,11 @@ class RebatchingClient:
                 take = min(rows - src, self.full_batch_size - lo)
                 slot.filled += take
                 slot.writers += 1
+                if self.telemetry is not None:
+                    sp = current_span()
+                    if sp is not None and (
+                            not slot.spans or slot.spans[-1] is not sp):
+                        slot.spans.append(sp)
                 if slot.filled == self.full_batch_size:
                     self._slot = None   # fully reserved; next put starts fresh
             ok = False
@@ -332,6 +350,8 @@ class RebatchingClient:
                 tail = reshuffle(tail, self.shuffle_seed + slot.emit_seq)
             if self.track_emitted_rows:
                 self.emitted_rows.append(n)
+            if self.telemetry is not None:
+                self.telemetry.spans.emit_batch(slot.emit_seq, slot.spans, n)
             self._q.put(tail)
         self._q.put(None)
 
@@ -356,6 +376,11 @@ class RebatchingClient:
 
     def record_train_step(self, seconds: float) -> None:
         self.stats.train_time_s += seconds
+
+    def stats_snapshot(self) -> ClientStats:
+        """Consistent point-in-time copy of the counters (Feed.snapshot())."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:

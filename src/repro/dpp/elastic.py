@@ -173,6 +173,9 @@ class DPPWorkerPool:
         self._obuf_cap = max(8, 4 * n_workers)
         self._place_dead = False
         self._placer: Optional[threading.Thread] = None
+        # optional per-run telemetry (repro.obs.Telemetry): span mint point
+        # for the whole pipeline — the work-item seq IS the correlation id
+        self.telemetry = None
 
     @classmethod
     def from_plan(cls, plan, client, **kwargs) -> "DPPWorkerPool":
@@ -187,6 +190,9 @@ class DPPWorkerPool:
         with self._lock:
             seq = self._seq
             self._seq += 1
+        tel = self.telemetry
+        if tel is not None:
+            tel.spans.mint(seq)   # sampled 1-in-N inside the tracker
         return (seq, 0, item)
 
     def _worker_loop(self, worker) -> None:
@@ -223,6 +229,11 @@ class DPPWorkerPool:
                     with self._lock:
                         self._retry.append(task)
                     return
+                tel = self.telemetry
+                if tel is not None:
+                    # park this item's span in the thread-local so the
+                    # worker's _lookup/_featurize record stages ambiently
+                    tel.spans.enter_item(seq)
                 try:
                     if self.jagged and hasattr(worker, "process_jagged"):
                         out = worker.process_jagged(item)
@@ -235,10 +246,18 @@ class DPPWorkerPool:
                     # safe (materialization is a pure read). Failures inside
                     # ``put`` below are NOT healed — a partial placement
                     # poisons its slot, so a retry would duplicate rows.
+                    if tel is not None:
+                        tel.events.emit("worker_crash", seq=seq,
+                                        error=type(exc).__name__)
                     if self._heal(seq, attempts, item, exc):
                         return  # replacement spawned; this thread retires
+                    if tel is not None:
+                        tel.spans.abandon(seq)
                     self._tombstone(seq)
                     raise
+                finally:
+                    if tel is not None:
+                        tel.spans.exit_item()
                 self._deliver(seq, item, out, put)
                 with self._lock:
                     self.items_done += 1
@@ -274,6 +293,10 @@ class DPPWorkerPool:
             except BaseException as cb_exc:
                 with self._lock:
                     self._errors.append(cb_exc)
+            if self.telemetry is not None:
+                self.telemetry.spans.abandon(seq)
+                self.telemetry.events.emit("item_abandoned", seq=seq,
+                                           attempts=attempts)
             self._tombstone(seq, item)
         else:
             with self._lock:
@@ -285,6 +308,9 @@ class DPPWorkerPool:
                         self.retry_backoff.delay(attempts - 1, token=seq)
                 self._retry.append((seq, attempts, item))
                 self.items_requeued += 1
+            if self.telemetry is not None:
+                self.telemetry.events.emit("item_requeued", seq=seq,
+                                           attempts=attempts)
         self._respawn()
         return True
 
@@ -300,6 +326,8 @@ class DPPWorkerPool:
         caches) BEFORE the dying thread exits, so the logical worker count —
         and the guarantee that a requeued head item finds a runnable thread —
         never dips."""
+        if self.telemetry is not None:
+            self.telemetry.events.emit("worker_restart")
         with self._lock:
             self.worker_restarts += 1
             if self._retire > 0:
@@ -326,12 +354,39 @@ class DPPWorkerPool:
                 self._place_cv.wait(timeout=0.1)
             return not self._place_dead
 
+    def _put_with_span(self, seq: int, put, out) -> None:
+        """``put`` with the item's span parked in the thread-local so the
+        client can attach it to every slot the rows land in; records the
+        place stage and retires the span from the live-item map."""
+        tel = self.telemetry
+        if tel is None:
+            put(out)
+            return
+        tel.spans.enter_item(seq, attempt=False)
+        t0 = time.perf_counter()
+        try:
+            put(out)
+            sp = tel.spans.get(seq)
+            if sp is not None:
+                sp.stage("place", t0, time.perf_counter())
+        finally:
+            tel.spans.exit_item()
+            tel.spans.finish_item(seq)
+
+    def _finish_span(self, seq: int) -> None:
+        """Retire an item that reached its placement turn without a ``put``
+        (worker dropped every example) so its span cannot orphan."""
+        if self.telemetry is not None:
+            self.telemetry.spans.finish_item(seq)
+
     def _deliver(self, seq: int, item: List, out, put) -> None:
         if not self.ordered:
             if self.on_place is not None:
                 self.on_place(item)     # before put, as in the placer
             if out is not None:   # None = worker dropped every example
-                put(out)
+                self._put_with_span(seq, put, out)
+            else:
+                self._finish_span(seq)
             return
         with self._place_cv:
             self._obuf[seq] = (put, out, item)
@@ -355,7 +410,8 @@ class DPPWorkerPool:
                         if self._placer_done():
                             return
                         self._place_cv.wait(timeout=0.05)
-                    put, out, item = self._obuf.pop(self._next_place)
+                    seq = self._next_place
+                    put, out, item = self._obuf.pop(seq)
                 # place OUTSIDE the cv: ``put`` may block on the client's
                 # bounded slot queue (that stall IS the pool's backpressure —
                 # admission gates on the cursor, which only moves below).
@@ -367,7 +423,9 @@ class DPPWorkerPool:
                     if item is not None and self.on_place is not None:
                         self.on_place(item)
                     if out is not None:
-                        put(out)
+                        self._put_with_span(seq, put, out)
+                    else:
+                        self._finish_span(seq)
                 elif item is not None and self.on_skip is not None:
                     self.on_skip(item)   # abandoned item reached its turn
                 with self._place_cv:

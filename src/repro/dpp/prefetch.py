@@ -102,8 +102,27 @@ class DevicePrefetcher:
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._started = False
+        self._telemetry = None
+        self._h2d_hist = None
         # end-of-stream sentinel observed by the consumer (vs a get timeout)
         self.ended = False
+
+    # -- telemetry ----------------------------------------------------------------
+    @property
+    def telemetry(self):
+        return self._telemetry
+
+    @telemetry.setter
+    def telemetry(self, tel) -> None:
+        """Attach a ``repro.obs.Telemetry``. Must happen BEFORE ``start()``:
+        the span tracker's delivery FIFO switches to the H2D-done lane
+        (``has_h2d``) and emitted/consumed counts must match."""
+        self._telemetry = tel
+        if tel is not None:
+            tel.spans.has_h2d = True
+            self._h2d_hist = tel.registry.histogram(
+                "repro_h2d_seconds",
+                help="host->device transfer time per full batch")
 
     # -- producer (background transfer thread) -----------------------------------
     def _pull(self):
@@ -141,10 +160,18 @@ class DevicePrefetcher:
                 host_batch = self._pull()
                 if host_batch is None:
                     break
+                tel = self._telemetry
+                bs = tel.spans.pop_emitted() if tel is not None else None
                 self._clock.enter("h2d")
                 t0 = time.perf_counter()
                 dev = self._transfer(host_batch)
-                self.stats.h2d_time_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                self.stats.h2d_time_s += t1 - t0
+                if tel is not None:
+                    if bs is not None:
+                        bs.stage("h2d", t0, t1)
+                        tel.spans.push_h2d_done(bs)
+                    self._h2d_hist.observe(t1 - t0)
                 if self.recycle_host:
                     rec = getattr(self.source, "recycle", None)
                     if rec is not None:

@@ -26,6 +26,7 @@ from repro.dpp.featurize import (
     featurize,
     featurize_jagged,
 )
+from repro.obs.spans import current_span
 
 ProbeFn = Callable[[int], Optional[List[TrainingExample]]]  # batch idx -> examples
 
@@ -118,15 +119,27 @@ class DPPWorker:
         self.stats.dedup_hits += d.dedup_hits
         self.stats.decode_cache_hits += d.decode_cache_hits
         self.stats.parallel_shards += d.parallel_shards
-        self.stats.lookup_time_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.lookup_time_s += t1 - t0
+        sp = current_span()
+        if sp is not None:
+            # decode runs on store-internal shard threads, so it folds into
+            # the scan stage; the IOStats delta keeps its weight visible
+            sp.stage("scan", t0, t1)
+            sp.meta["bytes_scanned"] = sp.meta.get("bytes_scanned", 0) + d.bytes_scanned
+            sp.meta["bytes_decoded"] = sp.meta.get("bytes_decoded", 0) + d.bytes_decoded
         return uihs
 
     def _featurize(self, examples, uihs) -> Dict[str, np.ndarray]:
         t0 = time.perf_counter()
         out = featurize(examples, uihs, self.feature_spec)
-        self.stats.featurize_time_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.featurize_time_s += t1 - t0
         self.stats.base_batches += 1
         self.stats.examples += len(examples)
+        sp = current_span()
+        if sp is not None:
+            sp.stage("featurize", t0, t1)
         return out
 
     def process(self, examples: List[TrainingExample]) -> Dict[str, np.ndarray]:
@@ -139,9 +152,13 @@ class DPPWorker:
         uihs = self._lookup(examples)
         t0 = time.perf_counter()
         out = featurize_jagged(examples, uihs, self.feature_spec)
-        self.stats.featurize_time_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.featurize_time_s += t1 - t0
         self.stats.base_batches += 1
         self.stats.examples += len(examples)
+        sp = current_span()
+        if sp is not None:
+            sp.stage("featurize", t0, t1)
         return out
 
     def _probe(self, probe: ProbeFn, idx: int) -> Optional[List[TrainingExample]]:

@@ -1,0 +1,22 @@
+"""Unified telemetry for the data plane (DESIGN.md §13).
+
+    from repro.obs import Telemetry
+    tel = Telemetry(sample_every=8)
+    spec = DatasetSpec(..., telemetry=tel)
+    ...
+    tel.write_run_dir("runs/my-run")
+    # python -m repro.obs.report runs/my-run
+"""
+from repro.obs.events import Event, EventLog
+from repro.obs.registry import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                                MetricsRegistry, publish_dataclass)
+from repro.obs.spans import (HOST_STAGES, STAGES, BatchSpan, ItemSpan,
+                             SpanTracker, critical_path, current_span)
+from repro.obs.telemetry import DEFAULT_SAMPLE_EVERY, Telemetry
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "publish_dataclass",
+    "DEFAULT_BUCKETS", "Event", "EventLog", "ItemSpan", "BatchSpan",
+    "SpanTracker", "current_span", "critical_path", "STAGES", "HOST_STAGES",
+    "Telemetry", "DEFAULT_SAMPLE_EVERY",
+]

@@ -35,7 +35,7 @@ class CircuitBreaker:
     """Consecutive-failure circuit breaker: open -> probe half-open -> close."""
 
     def __init__(self, threshold: int = 3, reset_s: float = 0.05,
-                 clock=time.monotonic):
+                 clock=time.monotonic, listener=None):
         if threshold < 1:
             raise ValueError(f"threshold must be >= 1, got {threshold}")
         self.threshold = threshold
@@ -47,6 +47,14 @@ class CircuitBreaker:
         self._opened_at = 0.0
         self._probing = False       # half-open probe currently admitted
         self.opens = 0              # lifetime closed/half-open -> open count
+        # Optional ``listener(old_state, new_state)`` invoked outside the
+        # breaker lock on every state transition — the sharded store points
+        # this at the control-plane event log (DESIGN.md §13).
+        self.listener = listener
+
+    def _notify(self, old: str, new: str) -> None:
+        if self.listener is not None and old != new:
+            self.listener(old, new)
 
     @property
     def state(self) -> str:
@@ -58,52 +66,62 @@ class CircuitBreaker:
         transitions to HALF_OPEN once ``reset_s`` has elapsed and admits a
         single probe; further requests are shed until the probe resolves."""
         with self._lock:
+            old = self._state
             if self._state == CLOSED:
                 return True
             if self._state == OPEN:
                 if self._clock() - self._opened_at >= self.reset_s:
                     self._state = HALF_OPEN
                     self._probing = True
-                    return True
+                else:
+                    return False
+            elif self._probing:
+                # HALF_OPEN: one probe at a time
                 return False
-            # HALF_OPEN: one probe at a time
-            if self._probing:
-                return False
-            self._probing = True
-            return True
+            else:
+                self._probing = True
+                return True
+        self._notify(old, HALF_OPEN)
+        return True
 
     def record_success(self) -> None:
         with self._lock:
+            old = self._state
             self._state = CLOSED
             self._failures = 0
             self._probing = False
+        self._notify(old, CLOSED)
 
     def record_failure(self) -> bool:
         """Record a failed request; returns True when THIS failure opened the
         breaker (so the caller can count ``breaker_opens`` exactly once)."""
         with self._lock:
+            old = self._state
             if self._state == HALF_OPEN:
                 self._state = OPEN
                 self._opened_at = self._clock()
                 self._probing = False
                 self.opens += 1
-                return True
-            if self._state == OPEN:
+            elif self._state == OPEN:
                 return False
-            self._failures += 1
-            if self._failures >= self.threshold:
+            else:
+                self._failures += 1
+                if self._failures < self.threshold:
+                    return False
                 self._state = OPEN
                 self._opened_at = self._clock()
                 self.opens += 1
-                return True
-            return False
+        self._notify(old, OPEN)
+        return True
 
     def reset(self) -> None:
         """Administrative close (node recovered out-of-band)."""
         with self._lock:
+            old = self._state
             self._state = CLOSED
             self._failures = 0
             self._probing = False
+        self._notify(old, CLOSED)
 
     def __repr__(self) -> str:
         return (f"CircuitBreaker(state={self.state}, "

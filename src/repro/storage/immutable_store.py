@@ -268,6 +268,12 @@ def build_scan_plan(reqs, route, effective_traits) -> ScanPlan:
 
 
 class ImmutableUIHStore:
+    # Optional per-run telemetry (repro.obs.Telemetry) attached by
+    # ``open_feed``; every hook below degrades to one is-None check.
+    # Sharded tiers attach to the tier object only — member StoreNodes stay
+    # untelemetered so flips/leases are not double-counted.
+    telemetry = None
+
     def __init__(
         self,
         schema: Optional[ev.TraitSchema] = None,
@@ -350,6 +356,22 @@ class ImmutableUIHStore:
             self._live = _GenTable(gen=generation, shards=new_shards)
             self.generation = generation
         self.bulk_load_bytes += load_bytes
+        self._emit("generation_flip", store="immutable",
+                   generation=generation, tables=len(tables))
+
+    def _emit(self, kind: str, **fields) -> None:
+        tel = self.telemetry
+        if tel is not None:
+            tel.events.emit(kind, **fields)
+
+    def publish_telemetry(self) -> None:
+        """Flush the store's cumulative counters into the attached telemetry
+        registry (idempotent; adapters take monotone maxima)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        tel.publish_stats(self.stats, "io", store="immutable")
+        tel.publish_stats(self.lease_stats, "lease", store="immutable")
 
     # -- generation leases ----------------------------------------------------
     def acquire_lease(self, generation: Optional[int] = None) -> GenerationLease:
@@ -371,6 +393,7 @@ class ImmutableUIHStore:
                 g.refs += 1
                 target = generation
             self.lease_stats.acquired += 1
+        self._emit("lease_acquire", store="immutable", generation=target)
         return GenerationLease(self, target)
 
     def _release_lease(self, generation: int) -> None:
@@ -378,14 +401,14 @@ class ImmutableUIHStore:
             self.lease_stats.released += 1
             if generation == self._live.gen:
                 self._live.refs = max(0, self._live.refs - 1)
-                return
-            g = self._retained.get(generation)
-            if g is None:
-                return
-            g.refs -= 1
-            if g.refs <= 0:
-                del self._retained[generation]
-                self.lease_stats.generations_gc += 1
+            else:
+                g = self._retained.get(generation)
+                if g is not None:
+                    g.refs -= 1
+                    if g.refs <= 0:
+                        del self._retained[generation]
+                        self.lease_stats.generations_gc += 1
+        self._emit("lease_release", store="immutable", generation=generation)
 
     def has_generation(self, generation: int) -> bool:
         """True iff a ``ScanRequest(generation=...)`` would be servable now."""

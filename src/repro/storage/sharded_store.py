@@ -67,7 +67,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import events as ev
 from repro.core.backoff import Backoff
-from repro.storage.failover import CircuitBreaker, LatencyTracker
+from repro.obs.registry import Histogram
+from repro.storage.failover import CircuitBreaker
 from repro.storage.immutable_store import (
     GenerationUnavailable,
     ImmutableUIHStore,
@@ -236,7 +237,13 @@ class ShardedUIHStore:
         self._slow = [1.0] * n_nodes         # injected latency multipliers
         self._breakers = [CircuitBreaker(breaker_threshold, breaker_reset_s)
                           for _ in range(n_nodes)]
-        self._latency = LatencyTracker()
+        # Tier-wide RTT histogram (the hedge trigger). A registry-grade
+        # Histogram with a bounded exact-quantile window — same semantics
+        # the old ad-hoc LatencyTracker had (None below min_samples); when a
+        # Telemetry object is attached it is re-homed into the run registry
+        # as ``repro_store_rtt_seconds``.
+        self._latency = Histogram(window=256, min_samples=16)
+        self._telemetry = None
         self._backoff = backoff or Backoff(base_s=0.002, max_s=0.05)
         # bulk loads a down node missed, replayed in order by recover()
         self._pending_loads: List[List[Tuple[int, dict]]] = [
@@ -301,6 +308,52 @@ class ShardedUIHStore:
     def _node_for(self, user_id: int, generation: int = -1) -> StoreNode:
         return self.nodes[self._node_of(user_id, generation)]
 
+    # -- telemetry (DESIGN.md §13) --------------------------------------------
+    @property
+    def telemetry(self):
+        return self._telemetry
+
+    @telemetry.setter
+    def telemetry(self, tel) -> None:
+        self._telemetry = tel
+        if tel is None:
+            return
+        # Re-home the hedge-trigger RTT histogram into the run registry and
+        # point every breaker's transition listener at the event log.
+        self._latency = tel.registry.histogram(
+            "repro_store_rtt_seconds",
+            help="per-attempt store-node round-trip time (hedge trigger)",
+            window=256, min_samples=16)
+        for nid, breaker in enumerate(self._breakers):
+            breaker.listener = self._breaker_listener(nid)
+
+    def _breaker_listener(self, node_id: int):
+        def _on_transition(old: str, new: str) -> None:
+            self._emit(f"breaker_{new}", node=node_id, prev=old)
+        return _on_transition
+
+    def _emit(self, kind: str, **fields) -> None:
+        tel = self._telemetry
+        if tel is not None:
+            tel.events.emit(kind, **fields)
+
+    def publish_telemetry(self) -> None:
+        """Publish tier + per-node IOStats and health counters into the
+        attached run registry (labels: store / node)."""
+        tel = self._telemetry
+        if tel is None:
+            return
+        tel.publish_stats(self.stats, "io", store="sharded")
+        tel.publish_stats(self.lease_stats, "lease", store="sharded")
+        for nid, node in enumerate(self.nodes):
+            tel.publish_stats(node.stats.snapshot(), "io_node", node=nid)
+        down_g = tel.registry.gauge("repro_store_node_down", labels=("node",))
+        opens_c = tel.registry.counter("repro_store_breaker_opens_total",
+                                       labels=("node",))
+        for nid in range(self.n_nodes):
+            down_g.labels(node=nid).set(1.0 if self._down[nid] else 0.0)
+            opens_c.labels(node=nid).set_total(self._breakers[nid].opens)
+
     # -- health surface --------------------------------------------------------
     def set_node_down(self, node_id: int, down: bool = True) -> None:
         """Mark a node unreachable: its reads raise ``NodeUnavailable`` (and
@@ -311,6 +364,7 @@ class ShardedUIHStore:
             self.recover(node_id)
             return
         self._down[node_id] = True
+        self._emit("node_down", node=node_id)
 
     def set_node_slow(self, node_id: int, multiplier: float = 1.0) -> None:
         """Inject a latency multiplier on one node (the ``node_slow`` chaos
@@ -345,6 +399,7 @@ class ShardedUIHStore:
             self._breakers[node_id].reset()
             self.rereplications += replayed
             self._gc_placements_locked()
+        self._emit("node_recover", node=node_id, replayed=replayed)
         return replayed
 
     # -- write path -----------------------------------------------------------
@@ -380,6 +435,8 @@ class ShardedUIHStore:
             self._live_placement = placement
             self._rebalance_pending = False
             self._gc_placements_locked()
+        self._emit("generation_flip", store="sharded", generation=generation,
+                   tables=len(tables))
 
     def _placement_for_load(self, tables) -> PlacementMap:
         if self.placement_policy == "hash":
@@ -439,6 +496,8 @@ class ShardedUIHStore:
             gen = node_leases[0][1].generation
             self._lease_refs[gen] = self._lease_refs.get(gen, 0) + 1
             self._lease_ls.acquired += 1
+        self._emit("lease_acquire", store="sharded", generation=gen,
+                   nodes=len(node_leases))
         return ShardedGenerationLease(self, gen, node_leases)
 
     def _release_client_lease(self, generation: int, node_leases) -> None:
@@ -459,6 +518,7 @@ class ShardedUIHStore:
             else:
                 self._lease_refs[generation] = refs
             self._gc_placements_locked()
+        self._emit("lease_release", store="sharded", generation=generation)
 
     @property
     def lease_stats(self) -> LeaseStats:
@@ -494,12 +554,22 @@ class ShardedUIHStore:
         return sorted(out)
 
     # -- failover executor -----------------------------------------------------
+    # failover-stat fields that double as control-plane timeline events
+    # (breaker transitions are emitted by the breakers' own listeners, and
+    # hedged_reads is volume, not an incident)
+    _COUNT_EVENTS = {"failovers": "failover", "hedge_wins": "hedge_win",
+                     "degraded_scans": "degraded_scan",
+                     "partial_reissues": "partial_reissue"}
+
     def _count(self, call: Optional[IOStats], field: str, n: int = 1) -> None:
         with self._stats_lock:
             setattr(self._failover_stats, field,
                     getattr(self._failover_stats, field) + n)
             if call is not None:
                 setattr(call, field, getattr(call, field) + n)
+        kind = self._COUNT_EVENTS.get(field)
+        if kind is not None:
+            self._emit(kind)
 
     def _timed_op(self, op: Callable[[int], object], rep: int):
         """One attempt against one node: down check, injected slowness, and

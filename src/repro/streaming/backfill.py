@@ -99,6 +99,8 @@ class BackfillCoordinator:
         # per-filter prefix counters live here, not in the frozen filters.
         self._filters: List[List] = [[f, 0] for f in resume_filters]
         self.stats = BackfillStats()
+        # optional repro.obs.Telemetry (control-plane events)
+        self.telemetry = None
 
     # -- resume filter chain ---------------------------------------------------
     def _replay_drops(self, exm: TrainingExample) -> bool:
@@ -147,6 +149,11 @@ class BackfillCoordinator:
         if buf:
             yield buf
         st.flipped = True
+        if self.telemetry is not None:
+            self.telemetry.events.emit(
+                "backfill_flip", watermark=st.watermark,
+                hours_replayed=st.hours_replayed,
+                warehouse_examples=st.warehouse_examples)
         # -- phase 2: live stream, exactly-once across the flip ---------------
         for mb in self.source.micro_batches():
             keep: List[TrainingExample] = []

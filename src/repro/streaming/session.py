@@ -208,6 +208,22 @@ class StreamingSession:
         # examples dropped by stale-generation triage (window truly changed)
         self.stale_dropped = 0
 
+    # -- telemetry ---------------------------------------------------------------
+    @property
+    def telemetry(self):
+        return self.client.telemetry
+
+    @telemetry.setter
+    def telemetry(self, tel) -> None:
+        """Attach a ``repro.obs.Telemetry`` to every stage the session owns
+        (client emit spans, pool item spans + worker events, source
+        reconnects, backfill flip). Set BEFORE ``start()``."""
+        self.client.telemetry = tel
+        self.pool.telemetry = tel
+        self.source.telemetry = tel
+        if self.coordinator is not None:
+            self.coordinator.telemetry = tel
+
     # -- lifecycle --------------------------------------------------------------
     def start(self) -> "StreamingSession":
         """Start draining. A background joiner waits out the pool so the

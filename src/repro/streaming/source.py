@@ -62,6 +62,8 @@ class StreamingSource:
         self.stream = stream
         self.cfg = cfg or MicroBatchConfig()
         self.stats = SourceStats()
+        # optional repro.obs.Telemetry (control-plane events)
+        self.telemetry = None
         # attach: examples published from here on get freshness clocks (the
         # pre-attach backlog is catch-up traffic — latency samples would only
         # measure how old the backlog is, not the live loop)
@@ -87,6 +89,9 @@ class StreamingSource:
                 # messages, so reconnect-and-repoll loses nothing (and the
                 # buffered micro-batch keeps its deadline)
                 self.stats.reconnects += 1
+                if self.telemetry is not None:
+                    self.telemetry.events.emit(
+                        "stream_reconnect", reconnects=self.stats.reconnects)
                 continue
             now = time.perf_counter()
             if exm is not None:

@@ -40,6 +40,12 @@ class TrainerConfig:
     # streaming feed mode: bound ``fit`` by wall clock instead of (or in
     # addition to) max_steps — an online trainer's stream never exhausts.
     max_wall_s: Optional[float] = None
+    # unified telemetry (§13): a ``repro.obs.Telemetry`` — ``fit`` observes a
+    # per-step ``repro_train_step_seconds`` histogram, ``save``/``try_resume``
+    # emit checkpoint_save / checkpoint_resume events. Falls back to the
+    # feed's own telemetry when None.
+    telemetry: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
 
 class Trainer:
@@ -120,6 +126,10 @@ class Trainer:
             feed_state = feed.checkpoint()
         self.ckpt.save(self.step, state, extra={"step": self.step},
                        feed_state=feed_state)
+        tel = self._telemetry()
+        if tel is not None:
+            tel.events.emit("checkpoint_save", step=self.step,
+                            has_feed_state=feed_state is not None)
 
     def try_resume(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_step() is None:
@@ -132,7 +142,16 @@ class Trainer:
         self.opt_state = state["opt"]
         self.ef_state = state.get("ef", self.ef_state)
         self.step = step
+        tel = self._telemetry()
+        if tel is not None:
+            tel.events.emit("checkpoint_resume", step=step)
         return True
+
+    def _telemetry(self):
+        """The active telemetry: the config's, else the fit feed's."""
+        if self.cfg.telemetry is not None:
+            return self.cfg.telemetry
+        return getattr(self._fit_feed, "telemetry", None)
 
     # -- full loop ---------------------------------------------------------------
     def fit(self, batches: Iterable[Dict[str, np.ndarray]],
@@ -147,6 +166,10 @@ class Trainer:
         # GPU-busy accounting feeds the elastic controller's starvation signal
         record = getattr(feed, "record_train_step", None)
         self._fit_feed = feed if isinstance(feed, Feed) else None
+        tel = self._telemetry()
+        step_hist = (tel.registry.histogram(
+            "repro_train_step_seconds",
+            help="device train-step wall time") if tel is not None else None)
         t0 = time.perf_counter()
 
         def batches():
@@ -197,8 +220,11 @@ class Trainer:
             for batch in batches():
                 ts = time.perf_counter()
                 stats = self.run_step(batch)
+                dt_step = time.perf_counter() - ts
                 if record is not None:
-                    record(time.perf_counter() - ts)
+                    record(dt_step)
+                if step_hist is not None:
+                    step_hist.observe(dt_step)
                 if (self.ckpt and self._fit_feed is not None
                         and self.step % self.cfg.ckpt_every == 0):
                     # deferred from run_step: the feed's trained-row counter

@@ -1,0 +1,80 @@
+"""Documentation drift guard (DESIGN.md §13).
+
+The telemetry section promises an EXHAUSTIVE cross-reference: every field of
+every ``*Stats`` dataclass in ``src/repro`` maps to a registry series (or is
+explicitly called out as not adapter-published), and every directly
+registered metric name is documented.  These tests walk the live code — new
+counters or metrics added without a DESIGN.md row fail tier-1 instead of
+rotting the docs.
+"""
+import dataclasses
+import importlib
+import inspect
+import pkgutil
+import re
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DESIGN = (REPO_ROOT / "DESIGN.md").read_text()
+SRC = REPO_ROOT / "src" / "repro"
+
+
+def _all_stats_classes():
+    import repro
+
+    out = {}
+    for mod in pkgutil.walk_packages(repro.__path__, "repro."):
+        m = importlib.import_module(mod.name)   # import errors ARE failures
+        for name, obj in vars(m).items():
+            if (inspect.isclass(obj) and dataclasses.is_dataclass(obj)
+                    and name.endswith("Stats")
+                    and obj.__module__ == m.__name__):
+                out[name] = obj
+    return out
+
+
+def test_every_stats_field_documented_in_design():
+    classes = _all_stats_classes()
+    assert len(classes) >= 13, sorted(classes)   # the §13 inventory
+    missing = []
+    for cls_name, cls in sorted(classes.items()):
+        for f in dataclasses.fields(cls):
+            if f"{cls_name}.{f.name}" not in DESIGN:
+                missing.append(f"{cls_name}.{f.name}")
+    assert not missing, (
+        "DESIGN.md §13 cross-reference is missing *Stats fields "
+        f"(add a mapping row or a not-published note): {missing}")
+
+
+# a directly registered metric: counter/gauge/histogram( "repro_..."
+# possibly with the name literal on the following line
+_METRIC_RE = re.compile(
+    r"(?:counter|gauge|histogram)\(\s*\n?\s*\"(repro_[a-z0-9_]+)\"")
+
+
+def test_every_registered_metric_name_documented_in_design():
+    names = set()
+    for path in SRC.rglob("*.py"):
+        names.update(_METRIC_RE.findall(path.read_text()))
+    # the adapter's f-string families are covered by the naming rule + the
+    # cross-reference table; this walk catches the directly named metrics
+    assert "repro_stage_seconds" in names       # the walk itself works
+    assert "repro_store_rtt_seconds" in names
+    missing = sorted(n for n in names if n not in DESIGN)
+    assert not missing, (
+        f"DESIGN.md §13 is missing registered metric names: {missing}")
+
+
+_EVENT_RE = re.compile(r"""(?:events\.emit|_emit)\(\s*\n?\s*"([a-z_]+)\"""")
+
+
+def test_every_emitted_event_kind_documented_in_design():
+    kinds = set()
+    for path in SRC.rglob("*.py"):
+        kinds.update(_EVENT_RE.findall(path.read_text()))
+    # breaker transitions are emitted via an f-string on the state name
+    kinds.update({"breaker_open", "breaker_half_open", "breaker_closed"})
+    assert "generation_flip" in kinds and "worker_restart" in kinds
+    missing = sorted(k for k in kinds if f"`{k}`" not in DESIGN)
+    assert not missing, (
+        f"DESIGN.md §13 event-kind list is missing: {missing}")
