@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.bench_failover",
     "benchmarks.bench_streaming",
     "benchmarks.bench_chaos",
+    "benchmarks.bench_serve",
     "benchmarks.bench_kernels",
     "benchmarks.fig4_ne_scaling",
 ]

@@ -46,6 +46,7 @@ immutable window, so streaming and user-bucketed batch jobs both hit heavily.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
@@ -158,6 +159,14 @@ class Materializer:
         # promoted, so a hot user's window survives colder evictions.
         self.window_cache_size = window_cache_size
         self._window_cache: "OrderedDict" = OrderedDict()
+        # The LRU is shared by concurrent callers (the serving tier issues
+        # materializations from request threads); the promote-on-hit
+        # move_to_end / evicting popitem pair corrupts an OrderedDict when
+        # interleaved, so both cache ops take this lock. ``stats`` counters
+        # remain unsynchronized — they are best-effort telemetry, and a lost
+        # increment under contention is harmless where a corrupted cache is
+        # not.
+        self._cache_lock = threading.Lock()
 
     # -- single example -------------------------------------------------------
     def materialize(
@@ -443,18 +452,20 @@ class Materializer:
     def _window_cache_get(self, key: tuple) -> Optional[ev.EventBatch]:
         if not self.window_cache_size:
             return None
-        hit = self._window_cache.get(key)
-        if hit is not None:
-            self._window_cache.move_to_end(key)  # true LRU: promote on hit
-        return hit
+        with self._cache_lock:
+            hit = self._window_cache.get(key)
+            if hit is not None:
+                self._window_cache.move_to_end(key)  # true LRU: promote on hit
+            return hit
 
     def _window_cache_put(self, key: tuple, imm: ev.EventBatch) -> None:
         if not self.window_cache_size:
             return
-        self._window_cache[key] = imm
-        self._window_cache.move_to_end(key)
-        while len(self._window_cache) > self.window_cache_size:
-            self._window_cache.popitem(last=False)
+        with self._cache_lock:
+            self._window_cache[key] = imm
+            self._window_cache.move_to_end(key)
+            while len(self._window_cache) > self.window_cache_size:
+                self._window_cache.popitem(last=False)
 
     def _window_generation(self, example: TrainingExample) -> int:
         """Resolve which generation serves this example's window: the logged

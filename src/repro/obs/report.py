@@ -172,6 +172,76 @@ def render_slowest(spans: List[Dict[str, Any]], top_k: int = 5) -> str:
     return "\n".join(lines)
 
 
+def _hist_quantile(series: List[Dict[str, Any]], q: float) -> Optional[float]:
+    """Interpolated quantile over the SUMMED bucket vectors of a histogram
+    family's series (same semantics as ``Histogram.quantile`` without a
+    window), so multi-server runs report one combined figure."""
+    buckets: List[float] = []
+    counts: List[int] = []
+    for s in series:
+        if not s.get("counts"):
+            continue
+        if not buckets:
+            buckets, counts = list(s["buckets"]), list(s["counts"])
+        elif list(s["buckets"]) == buckets:
+            counts = [a + b for a, b in zip(counts, s["counts"])]
+    total = sum(counts)
+    if not total:
+        return None
+    target = max(0.0, min(1.0, q)) * total
+    cum = 0
+    for i, c in enumerate(counts):
+        if c == 0:
+            continue
+        if cum + c >= target:
+            lo = buckets[i - 1] if i > 0 else 0.0
+            hi = buckets[i] if i < len(buckets) else buckets[-1]
+            return lo + (hi - lo) * ((target - cum) / c)
+        cum += c
+    return buckets[-1]
+
+
+def render_serve(metrics: Dict[str, Any],
+                 events: List[Dict[str, Any]]) -> Optional[str]:
+    """Serving-tier section (DESIGN.md §14): request-latency p50/p99 from the
+    ``repro_serve_request_seconds`` histogram, embedding-cache hit rate from
+    the ``repro_serve_embed_cache_*`` counters, and the last sampled top-k
+    answer. Returns ``None`` when the run served no requests."""
+    fam = metrics.get("repro_serve_request_seconds") or {}
+    series = fam.get("series", [])
+    n = sum(s.get("count", 0) for s in series)
+    requests = _counter_total(metrics, "repro_serve_requests_total")
+    if not n and not requests:
+        return None
+    lines = ["== serving tier =="]
+    p50, p99 = _hist_quantile(series, 0.5), _hist_quantile(series, 0.99)
+    if p50 is not None:
+        lines.append(f"requests: {int(requests or n)}  "
+                     f"latency p50={1e3 * p50:.3f}ms p99={1e3 * p99:.3f}ms")
+    lookups = _counter_total(metrics, "repro_serve_embed_cache_lookups_total")
+    hits = _counter_total(metrics, "repro_serve_embed_cache_hits_total")
+    if lookups:
+        inv = (_counter_total(
+                   metrics, "repro_serve_embed_cache_invalidated_generation_total")
+               + _counter_total(
+                   metrics, "repro_serve_embed_cache_invalidated_freshness_total"))
+        lines.append(f"embedding cache: {int(hits)}/{int(lookups)} hits "
+                     f"({100 * hits / lookups:.1f}%), "
+                     f"{int(inv)} invalidations")
+    cold = _counter_total(metrics, "repro_serve_cold_requests_total")
+    batches = _counter_total(metrics, "repro_serve_batches_total")
+    if batches:
+        lines.append(f"micro-batches: {int(batches)} "
+                     f"({int(cold)} cold-path requests)")
+    samples = [e for e in events if e.get("kind") == "serve_topk_sample"]
+    if samples:
+        s = samples[-1]
+        lines.append(f"sampled top-{s.get('k')} (user {s.get('user')}, "
+                     f"gen {s.get('generation')}, "
+                     f"index v{s.get('index_version')}): {s.get('items')}")
+    return "\n".join(lines)
+
+
 def render_report(run_dir, top_k: int = 5) -> str:
     data = load_run_dir(run_dir)
     sections = [
@@ -181,6 +251,9 @@ def render_report(run_dir, top_k: int = 5) -> str:
         render_timeline(data["events"]),
         render_slowest(data["spans"], top_k=top_k),
     ]
+    serve = render_serve(data["metrics"], data["events"])
+    if serve:
+        sections.append(serve)
     summary = data.get("summary") or {}
     span_counts = summary.get("spans")
     if span_counts:

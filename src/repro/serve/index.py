@@ -1,0 +1,108 @@
+"""Refreshable item-tower candidate index + batched top-k (DESIGN.md §14.3).
+
+The item side of two-tower retrieval is embarrassingly precomputable: the
+item tower depends only on model parameters, so serving keeps the full
+corpus's item embeddings as one dense ``[N, d]`` matrix and answers a request
+batch with a single ``scores = U @ V.T`` + ``jax.lax.top_k``. ``refresh``
+recomputes the matrix from a (new) parameter set and swaps it atomically
+under a lock — in-flight ``top_k`` calls finish against the matrix they
+grabbed, the next batch sees the new one (the serving analogue of a
+generation flip, and emitted as a ``serve_index_refresh`` event).
+
+``top_k`` jit-compiles one scorer per requested ``k`` (k is a static shape
+argument) and reuses it for every subsequent batch of the same shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import recsys as R
+
+
+@dataclasses.dataclass
+class IndexStats:
+    refreshes: int = 0      # full item-tower recomputes + atomic swaps
+    queries: int = 0        # top_k batch calls answered
+    scored_rows: int = 0    # user rows scored across all queries
+    refresh_s: float = 0.0  # cumulative wall seconds spent refreshing
+
+
+class CandidateIndex:
+    """Dense item-embedding matrix over a fixed candidate corpus."""
+
+    def __init__(self, cfg: R.TwoTowerConfig,
+                 item_ids: Optional[np.ndarray] = None,
+                 telemetry=None, batch_size: int = 8192):
+        self.cfg = cfg
+        self.item_ids = (np.arange(cfg.item_vocab, dtype=np.int64)
+                         if item_ids is None
+                         else np.asarray(item_ids, np.int64))
+        self.telemetry = telemetry
+        self.batch_size = batch_size
+        self.version = 0            # bumped on every refresh; 0 = never built
+        self.stats = IndexStats()
+        self._lock = threading.Lock()
+        self._emb = None            # device [N, d], L2-normalized rows
+        self._item_fn = jax.jit(lambda p, ids: R.two_tower_item(p, ids, cfg))
+        self._topk_fns: Dict[int, any] = {}
+
+    def __len__(self) -> int:
+        return len(self.item_ids)
+
+    def refresh(self, params) -> int:
+        """Recompute every candidate's item-tower embedding from ``params``
+        and atomically publish the new matrix. Returns the new version."""
+        t0 = time.monotonic()
+        chunks = []
+        for lo in range(0, len(self.item_ids), self.batch_size):
+            ids = jnp.asarray(self.item_ids[lo:lo + self.batch_size])
+            chunks.append(self._item_fn(params, ids))
+        emb = jnp.concatenate(chunks, axis=0) if len(chunks) > 1 else chunks[0]
+        emb.block_until_ready()
+        with self._lock:
+            self._emb = emb
+            self.version += 1
+            version = self.version
+            self.stats.refreshes += 1
+            self.stats.refresh_s += time.monotonic() - t0
+        if self.telemetry is not None:
+            self.telemetry.events.emit(
+                "serve_index_refresh", version=version,
+                items=len(self.item_ids))
+        return version
+
+    def embeddings(self) -> np.ndarray:
+        """Host copy of the current matrix (tests / report tooling)."""
+        with self._lock:
+            emb = self._emb
+        if emb is None:
+            raise RuntimeError("candidate index never refreshed")
+        return np.asarray(emb)
+
+    def top_k(self, user_emb: np.ndarray,
+              k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Score ``[B, d]`` user embeddings against the corpus; returns
+        ``(item_ids [B, k], scores [B, k])`` sorted best-first."""
+        with self._lock:
+            emb = self._emb
+        if emb is None:
+            raise RuntimeError(
+                "candidate index never refreshed; call refresh(params) first")
+        k = min(k, len(self.item_ids))
+        fn = self._topk_fns.get(k)
+        if fn is None:
+            fn = jax.jit(
+                lambda u, e: jax.lax.top_k(
+                    (u @ e.T).astype(jnp.float32), k))
+            self._topk_fns[k] = fn
+        scores, idx = fn(jnp.asarray(user_emb), emb)
+        self.stats.queries += 1
+        self.stats.scored_rows += int(user_emb.shape[0])
+        return self.item_ids[np.asarray(idx)], np.asarray(scores)

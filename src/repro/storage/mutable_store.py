@@ -29,6 +29,12 @@ class MutableUIHStore:
         # must not lose a concurrent blind-write (or re-publish a cached view
         # missing it); reads stay lock-free
         self._write_lock = threading.Lock()
+        # per-user write-state version: bumped on every append and eviction.
+        # O(1) freshness probe for serving-side caches — an unchanged version
+        # guarantees an unchanged merged view (the converse is conservative:
+        # an eviction below a reader's window bumps it without changing that
+        # reader's slice, which can only cause a spurious recompute)
+        self._versions: Dict[int, int] = {}
         # accounting for benchmarks
         self.bytes_written = 0
         self.bytes_read = 0
@@ -44,6 +50,7 @@ class MutableUIHStore:
         with self._write_lock:
             self._chunks.setdefault(user_id, []).append(batch)
             self._cache.pop(user_id, None)
+            self._versions[user_id] = self._versions.get(user_id, 0) + 1
         self.appends += 1
         self.bytes_written += sum(v.nbytes for v in batch.values())
 
@@ -84,6 +91,7 @@ class MutableUIHStore:
             chunks = self._chunks.get(user_id)
             if not chunks:
                 return
+            self._versions[user_id] = self._versions.get(user_id, 0) + 1
             merged = self._cache.get(user_id)
             if merged is None or ev.batch_len(merged) == 0:
                 merged = ev.merge_sorted(chunks)
@@ -109,3 +117,9 @@ class MutableUIHStore:
 
     def resident_events(self, user_id: int) -> int:
         return sum(ev.batch_len(c) for c in self._chunks.get(user_id, []))
+
+    def version(self, user_id: int) -> int:
+        """Monotone per-user write-state version (0 = never written). Equal
+        versions imply an identical merged view; a bump means *something*
+        changed and any derived cache entry must be recomputed."""
+        return self._versions.get(user_id, 0)

@@ -1,0 +1,259 @@
+"""Low-latency serving tier (DESIGN.md §14): snapshot-consistent top-k.
+
+Covers the PR's acceptance spine:
+  * byte-identity — cache-on results identical to cache-off on the same mix
+    (the embedding cache is a latency optimization, never a staleness trade);
+  * generation flips — a synchronous compaction between waves invalidates
+    every cached embedding (``invalidated_generation``), yet results stay
+    byte-identical; a churn thread flipping generations THROUGH the waves
+    (the PR-3 harness style) never yields a failed request, a
+    ``StaleGeneration`` escape, or a leaked lease;
+  * freshness — new mutable events for a user make their cached embedding
+    unusable (``invalidated_freshness``) and the recomputed embedding differs;
+  * shutdown — ``close()`` drains in-flight requests and leaves ZERO leases
+    on the store;
+  * chaos — the 4-node r=2 sharded/replicated tier under ``node_flap`` +
+    ``node_slow`` serves the full mix byte-identical to the fault-free run
+    with replica failover absorbing the outage.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_sim
+from repro.models import recsys as R
+from repro.serve import RequestCoalescer, RetrievalServer, ServeConfig
+from repro.serve.coalescer import PendingRequest
+from repro.testing import FaultPlan, FaultSpec, wrap_sim
+
+CFG = R.TwoTowerConfig(
+    name="test-serve", embed_dim=8, tower_mlp=(16, 8), item_vocab=1_500,
+    user_vocab=64, uih_len=16, compute_dtype=jnp.float32)
+PARAMS = R.init_two_tower(jax.random.PRNGKey(0), CFG)
+TOP_K = 5
+
+
+def _server(sim, telemetry=None, **kw):
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_delay_s", 0.001)
+    return RetrievalServer.from_sim(
+        sim, PARAMS, CFG, telemetry=telemetry,
+        cfg=ServeConfig(lookback_ms=sim.cfg.lookback_ms, **kw))
+
+
+def _mix(sim, n=64):
+    now = max(e.request_ts for e in sim.examples)
+    seq = [e.user_id for e in sim.examples]
+    return now, (seq * (n // len(seq) + 1))[:n]
+
+
+def _issue(server, now, users):
+    pendings = [server.submit(u, now, k=TOP_K) for u in users]
+    return [p.result(timeout=30.0) for p in pendings]
+
+
+def _assert_same(want, got):
+    assert len(want) == len(got)
+    for i, (a, b) in enumerate(zip(want, got)):
+        np.testing.assert_array_equal(a.item_ids, b.item_ids,
+                                      err_msg=f"request {i} ids")
+        np.testing.assert_array_equal(a.scores, b.scores,
+                                      err_msg=f"request {i} scores")
+
+
+def _no_leaks(server, sim):
+    st = server.stats
+    assert st.failed_requests == 0
+    assert server.materializer.stats.stale_failures == 0
+    assert sim.immutable.leased_generations() == {}
+
+
+# ---------------------------------------------------------------------------
+# byte-identity: cache on vs cache off
+# ---------------------------------------------------------------------------
+
+def test_cache_on_byte_identical_to_cache_off():
+    sim = make_sim(users=6, days=2, seed=3, capture_reference=False)
+    now, users = _mix(sim)
+
+    off = _server(sim, cache_capacity=0, window_cache_size=0)
+    ref = _issue(off, now, users)
+    off.close()
+    _no_leaks(off, sim)
+    assert off.stats.cold_requests == len(users)   # nothing cached anywhere
+
+    on = _server(sim)
+    got = _issue(on, now, users)          # first wave populates...
+    got2 = _issue(on, now, users)         # ...second wave hits
+    on.close()
+    _no_leaks(on, sim)
+    _assert_same(ref, got)
+    _assert_same(ref, got2)
+    cs = on.cache.stats
+    assert cs.hits >= len(users)          # repeat users actually cached
+    assert all(r.cached for r in got2)
+    assert on.stats.cold_requests < len(users)
+
+
+# ---------------------------------------------------------------------------
+# generation flips: deterministic + flip-stress
+# ---------------------------------------------------------------------------
+
+def test_generation_flip_invalidates_every_cached_embedding():
+    sim = make_sim(users=6, days=2, seed=4, capture_reference=False)
+    now, users = _mix(sim)
+    server = _server(sim)
+    ref = _issue(server, now, users)
+    gen0 = sim.immutable.generation
+
+    sim.run_compaction(now, evict=False)   # flip: same content, new version
+    assert sim.immutable.generation > gen0
+
+    got = _issue(server, now, users)
+    server.close()
+    _no_leaks(server, sim)
+    _assert_same(ref, got)                 # compaction preserves content
+    distinct = len(set(users))
+    cs = server.cache.stats
+    assert cs.invalidated_generation >= distinct   # every entry was dropped
+    assert all(r.generation > gen0 for r in got)   # nothing served at old gen
+
+
+def test_flip_stress_churn_thread_never_serves_stale():
+    """PR-3 harness style: a compaction thread flips generations through the
+    whole request stream. Results must stay byte-identical to the quiet run —
+    a cached embedding from a superseded generation is never served — with
+    zero failed requests, zero StaleGeneration escapes, zero leaked leases."""
+    sim = make_sim(users=6, days=2, seed=5, capture_reference=False)
+    now, users = _mix(sim, n=96)
+    quiet = _server(sim, cache_capacity=0, window_cache_size=0)
+    ref = _issue(quiet, now, users)
+    quiet.close()
+
+    server = _server(sim)
+    stop = threading.Event()
+    flips = [0]
+
+    def churn():
+        while not stop.is_set():
+            sim.run_compaction(now, evict=False)
+            flips[0] += 1
+
+    th = threading.Thread(target=churn, daemon=True)
+    th.start()
+    try:
+        got = [_issue(server, now, users) for _ in range(3)]
+    finally:
+        stop.set()
+        th.join()
+    server.close()
+    _no_leaks(server, sim)
+    assert flips[0] >= 1
+    for wave in got:
+        _assert_same(ref, wave)
+
+
+# ---------------------------------------------------------------------------
+# freshness: new mutable events invalidate the cached embedding
+# ---------------------------------------------------------------------------
+
+def test_new_mutable_events_invalidate_cached_embedding():
+    sim = make_sim(users=6, days=2, seed=6, capture_reference=False)
+    now, users = _mix(sim)
+    u = users[0]
+    server = _server(sim)
+    server.retrieve(u, now, k=TOP_K)       # populate
+    first = server.retrieve(u, now, k=TOP_K)
+    assert first.cached
+
+    # a genuinely new engagement lands in the mutable tier for u
+    recent = sim.mutable.read(u, -1, now)
+    assert len(recent["timestamp"])
+    newer = {k: v[-1:].copy() for k, v in recent.items()}
+    newer["timestamp"] = np.array([now + 1_000], dtype=np.int64)
+    sim.mutable.append(u, newer)
+
+    second = _issue(server, now + 2_000, [u])[0]
+    server.close()
+    _no_leaks(server, sim)
+    assert not second.cached               # forced back through the cold path
+    assert server.cache.stats.invalidated_freshness >= 1
+
+
+# ---------------------------------------------------------------------------
+# shutdown: close() drains, answers everything, leaves zero leases
+# ---------------------------------------------------------------------------
+
+def test_close_drains_in_flight_requests_and_leaks_nothing():
+    sim = make_sim(users=6, days=2, seed=7, capture_reference=False)
+    now, users = _mix(sim, n=48)
+    server = _server(sim, max_delay_s=0.05)   # long deadline: close must drain
+    pendings = [server.submit(u, now, k=TOP_K) for u in users]
+    server.close()
+    results = [p.result(timeout=10.0) for p in pendings]
+    assert len(results) == len(users)
+    assert all(r.item_ids.shape == (TOP_K,) for r in results)
+    _no_leaks(server, sim)
+    # and the coalescer refuses new work instead of queueing it to nobody
+    try:
+        server.submit(users[0], now)
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+
+
+# ---------------------------------------------------------------------------
+# chaos: 4-node r=2 sharded/replicated tier under flap + slow
+# ---------------------------------------------------------------------------
+
+def test_chaos_sharded_r2_flap_and_slow_byte_identical():
+    sim = make_sim(users=6, days=2, seed=5, capture_reference=False,
+                   nodes=4, replication=2)
+    now, users = _mix(sim, n=96)
+    quiet = _server(sim, cache_capacity=0, window_cache_size=0)
+    ref = _issue(quiet, now, users)
+    quiet.close()
+
+    plan = FaultPlan([
+        FaultSpec("node_flap", 1, node=1, duration=2),
+        FaultSpec("node_slow", 3, node=2, duration=2, factor=4.0),
+        FaultSpec("node_flap", 5, node=3, duration=2),
+    ])
+    fsim = wrap_sim(sim, plan)
+    server = _server(fsim, cache_capacity=0, window_cache_size=0)
+    got = _issue(server, now, users)
+    server.close()
+    assert plan.n_fired == 3
+    fsim.immutable.settle_node_state()
+    _assert_same(ref, got)
+    _no_leaks(server, sim)
+    assert sim.immutable.stats.failovers >= 1   # the replica path absorbed it
+    ns = sim.immutable.node_stats()
+    assert not any(ns.down) and not any(ns.pending_replays)
+
+
+# ---------------------------------------------------------------------------
+# coalescer unit behavior: flush reasons + close semantics
+# ---------------------------------------------------------------------------
+
+def test_coalescer_flush_reasons():
+    c = RequestCoalescer(max_batch=2, max_delay_s=0.005)
+    c.submit(PendingRequest(1, 5, 100))
+    c.submit(PendingRequest(2, 5, 100))
+    batch, flush = c.next_batch()
+    assert flush == "size" and len(batch) == 2
+
+    c.submit(PendingRequest(3, 5, 100))
+    batch, flush = c.next_batch()          # lonely request: deadline flush
+    assert flush == "deadline" and len(batch) == 1
+
+    c.submit(PendingRequest(4, 5, 100))
+    c.close()
+    batch, flush = c.next_batch()
+    assert flush == "drain" and len(batch) == 1
+    assert c.next_batch() == (None, "closed")
+    st = c.stats
+    assert (st.size_flushes, st.deadline_flushes, st.drain_flushes) == (1, 1, 1)
