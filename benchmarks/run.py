@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.bench_chaos",
     "benchmarks.bench_serve",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_device_mat",
     "benchmarks.fig4_ne_scaling",
 ]
 

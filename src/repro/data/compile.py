@@ -280,10 +280,16 @@ def open_feed(
                     prep_fn=prep_fn, spec=spec, resume_meta=resume_meta,
                     telemetry=tel, store=sim.immutable)
 
+    # device-side late materialization: only when a device-prefetch stage
+    # exists to run the fused kernel and no prep_fn expects dense host
+    # batches — otherwise fall back to host densify (DESIGN §3 fallback
+    # rules; streaming sessions above always take the host path for now)
+    dev_mat = bool(spec.device_materialize) and depth > 0 and prep_fn is None
     client = RebatchingClient(spec.batch_size,
                               buffer_batches=spec.buffer_batches,
                               shuffle_seed=spec.reshuffle_seed,
-                              emit_seq_start=base_batches)
+                              emit_seq_start=base_batches,
+                              emit_jagged=dev_mat)
     # BEFORE the pool starts: the Feed's resume cursor reads every emitted
     # batch's row count from this FIFO (prep_fn may reshape batches)
     client.track_emitted_rows = spec.ordered
@@ -301,8 +307,14 @@ def open_feed(
     if depth > 0:
         from repro.dpp.prefetch import DevicePrefetcher
 
+        materialize = None
+        if dev_mat:
+            from repro.dpp.device_mat import DeviceMaterializer
+
+            materialize = DeviceMaterializer(sharding=sharding)
         prefetcher = DevicePrefetcher(client, depth=depth, sharding=sharding,
-                                      prep_fn=prep_fn)
+                                      prep_fn=prep_fn,
+                                      materialize=materialize)
         if tel is not None:
             prefetcher.telemetry = tel
         inner = prefetcher

@@ -120,6 +120,14 @@ class DatasetSpec:
     # exception is immediately fatal (the pre-§10 behavior)
     ordered: bool = True
     max_item_retries: int = 3
+    # device-side late materialization (DESIGN §3): ship compact jagged
+    # payloads (arena + offsets) to the device-prefetch stage and run the
+    # kernels/fused densify+decode on-accelerator instead of densifying on
+    # the host. Batches are byte-identical to the host path (tested), so the
+    # flag is an operational knob EXCLUDED from the resume fingerprint.
+    # Requires a device-prefetch stage and no prep_fn; open_feed silently
+    # falls back to the host path otherwise (fallback rules in DESIGN §3).
+    device_materialize: bool = False
     # unified telemetry (§13): a ``repro.obs.Telemetry`` threaded by
     # ``open_feed`` through every pipeline stage (store RTT histograms, item
     # spans, control-plane events). Excluded from equality/hash/repr — an

@@ -43,6 +43,7 @@ class ClientStats:
     starved_host_s: float = 0.0    # waiting on host-side data production
     starved_h2d_s: float = 0.0     # waiting on the host->device copy
     h2d_time_s: float = 0.0        # total device_put time (overlapped or not)
+    h2d_bytes: int = 0             # bytes actually shipped host->device
     slot_reuses: int = 0           # full batches served from a recycled slot
 
     @property
@@ -93,8 +94,16 @@ class RebatchingClient:
         buffer_batches: int = 8,
         shuffle_seed: Optional[int] = 0,
         emit_seq_start: int = 0,
+        emit_jagged: bool = False,
     ):
         self.full_batch_size = full_batch_size
+        # jagged-emission mode (device-side late materialization, DESIGN §3):
+        # slots hold per-row arena VIEWS instead of dense [B, L] storage and
+        # each emitted full batch is a COMPACT payload (flat arena + offsets
+        # per trait) for the DevicePrefetcher's materializer — the [B, L]
+        # zero-padded grids are never built on the host
+        self.emit_jagged = emit_jagged
+        self._jagged_meta: Optional[dict] = None
         self._q: "queue.Queue" = queue.Queue(maxsize=buffer_batches)
         self._lock = threading.Lock()
         self._closed = threading.Event()
@@ -204,7 +213,8 @@ class RebatchingClient:
                 # its last writer just committed
                 self.telemetry.spans.emit_batch(
                     slot.emit_seq, slot.spans, self.full_batch_size)
-            self._q.put(slot.arrays)
+            self._q.put(self._pack_jagged(slot.arrays)
+                        if self.emit_jagged else slot.arrays)
 
     def _place(self, rows: int, template_fn, write_fn) -> None:
         """Shared reservation loop for ``put``/``put_jagged``: reserve a span
@@ -239,6 +249,11 @@ class RebatchingClient:
 
     # -- producer side (DPP workers) --------------------------------------------
     def put(self, base_batch: Dict[str, np.ndarray]) -> None:
+        if self.emit_jagged:
+            raise TypeError(
+                "client is in jagged-emission mode (emit_jagged=True): dense "
+                "base batches would force the host densify the mode exists "
+                "to eliminate — produce JaggedFeatures and use put_jagged")
         rows = len(next(iter(base_batch.values())))
         self._place(
             rows, lambda: base_batch,
@@ -308,13 +323,110 @@ class RebatchingClient:
     def put_jagged(self, jf: JaggedFeatures) -> None:
         """Place a jagged (arena + offsets) base batch without densifying it
         first: one fused scatter per trait, reshuffle folded into placement.
-        Byte-identical to ``put(jf.to_padded())`` (tests/test_feed.py)."""
+        Byte-identical to ``put(jf.to_padded())`` (tests/test_feed.py).
+
+        In jagged-EMISSION mode the densify is skipped entirely: slots store
+        per-row arena views and the full batch leaves as a compact payload
+        (see ``_pack_jagged``) for the device-side fused kernel."""
+        if self.emit_jagged:
+            self._place(
+                jf.plan.b, lambda: self._jagged_emit_template(jf),
+                lambda slot, a, b, lo: self._write_jagged_rows(
+                    slot, jf, a, b, lo))
+            return
         self._place(
             jf.plan.b, lambda: self._jagged_template(jf),
             lambda slot, a, b, lo: self._write_jagged(slot, jf, a, b, lo))
 
+    # -- jagged emission (device-side late materialization) -----------------------
+    def _jagged_emit_template(self, jf: JaggedFeatures) -> Dict[str, np.ndarray]:
+        """Slot template for jagged-emission mode: one object column of row
+        views per trait plus the [B] scalar columns — no [B, L] storage."""
+        if self._jagged_meta is None:
+            self._jagged_meta = {
+                "seq_len": jf.plan.seq_len,
+                "traits": [(t, np.asarray(a).dtype)
+                           for t, a in jf.values.items()],
+                "scalar_keys": list(jf.scalars),
+            }
+        t: Dict[str, np.ndarray] = {"uih_len": np.zeros((0,), np.int32)}
+        for trait, _ in self._jagged_meta["traits"]:
+            t[f"_rows_{trait}"] = np.zeros((0,), object)
+        for k in self._jagged_meta["scalar_keys"]:
+            v = jf.scalars[k]
+            t[k] = np.zeros((0,) + v.shape[1:], v.dtype)
+        return t
+
+    def _write_jagged_rows(self, slot: _Slot, jf: JaggedFeatures,
+                           src_lo: int, src_hi: int, lo: int) -> None:
+        """Jagged-emission placement: store each arrival row's clipped-tail
+        arena VIEW at its write-time-permuted slot position — zero row copies
+        until emit concatenates the full batch's arena. Runs OUTSIDE the
+        client lock."""
+        meta = self._jagged_meta
+        if ([t for t, _ in meta["traits"]] != list(jf.values)
+                or meta["scalar_keys"] != list(jf.scalars)):
+            # same contract as the dense path: a schema-drifting base batch
+            # must fail loudly, not leave stale columns behind
+            raise KeyError(
+                f"base batch schema {sorted(jf.values)}/{sorted(jf.scalars)} "
+                f"!= slot schema {sorted(t for t, _ in meta['traits'])}/"
+                f"{sorted(meta['scalar_keys'])}")
+        n = src_hi - src_lo
+        if slot.inv is None:
+            dest = np.arange(lo, lo + n, dtype=np.int64)
+        else:
+            dest = slot.inv[lo : lo + n]
+        slot.arrays["uih_len"][dest] = \
+            jf.plan.lens[src_lo:src_hi].astype(np.int32)
+        for trait, arena in jf.values.items():
+            offs = jf.plan_for(trait).offsets
+            cells = np.empty(n, object)
+            cells[:] = [arena[offs[src_lo + i]:offs[src_lo + i + 1]]
+                        for i in range(n)]
+            slot.arrays[f"_rows_{trait}"][dest] = cells
+        for k, v in jf.scalars.items():
+            slot.arrays[k][dest] = v[src_lo:src_hi]
+
+    def _pack_jagged(self, arrays: Dict[str, np.ndarray],
+                     idx: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+        """A completed jagged slot -> the compact emitted payload:
+
+        ``uih_len`` [B] int32, one flat ``_arena_<trait>`` per trait (its
+        per-row offsets are the cumsum of ``uih_len`` clipped lens; traits
+        with their OWN plan — schema evolution — add ``_offsets_<trait>``),
+        the scalar columns, and ``_seq_len``. The DevicePrefetcher's
+        materializer turns this into the dense device batch; the layout
+        contract lives in DESIGN §3."""
+        meta = self._jagged_meta
+        lens = arrays["uih_len"] if idx is None else arrays["uih_len"][idx]
+        b = len(lens)
+        shared = np.zeros(b + 1, np.int64)
+        shared[1:] = np.cumsum(lens, dtype=np.int64)
+        out: Dict[str, np.ndarray] = {"uih_len": lens}
+        for trait, dtype in meta["traits"]:
+            rows = arrays[f"_rows_{trait}"]
+            if idx is not None:
+                rows = rows[idx]
+            tl = np.fromiter((r.shape[0] for r in rows), np.int64, count=b)
+            offs = np.zeros(b + 1, np.int64)
+            offs[1:] = np.cumsum(tl)
+            arena = (np.concatenate(list(rows)) if offs[-1]
+                     else np.zeros(0, dtype))
+            if arena.dtype != dtype:
+                arena = arena.astype(dtype)
+            out[f"_arena_{trait}"] = arena
+            if not np.array_equal(offs, shared):
+                out[f"_offsets_{trait}"] = offs
+        out["_seq_len"] = np.int64(meta["seq_len"])
+        for k in meta["scalar_keys"]:
+            out[k] = arrays[k] if idx is None else arrays[k][idx]
+        return out
+
     def recycle(self, batch: Dict[str, np.ndarray]) -> None:
         """Return a consumed full batch's storage to the slot pool."""
+        if self.emit_jagged:
+            return   # payloads are packed fresh at emit; slots hold views
         with self._lock:
             if len(self._free) < self._max_free:
                 self._free.append(batch)
@@ -343,11 +455,22 @@ class RebatchingClient:
             # arrival order, then reshuffle over the ACTUAL length n exactly
             # like the seed path's close() did
             if slot.inv is None:
-                tail = {k: v[:n] for k, v in slot.arrays.items()}
+                if self.emit_jagged:
+                    tail = self._pack_jagged(
+                        slot.arrays, np.arange(n, dtype=np.int64))
+                else:
+                    tail = {k: v[:n] for k, v in slot.arrays.items()}
             else:
                 order = slot.inv[:n]
-                tail = {k: v[order] for k, v in slot.arrays.items()}
-                tail = reshuffle(tail, self.shuffle_seed + slot.emit_seq)
+                if self.emit_jagged:
+                    # same semantics as the dense tail below: recover arrival
+                    # order, then reshuffle over the ACTUAL length n
+                    perm = np.random.default_rng(
+                        self.shuffle_seed + slot.emit_seq).permutation(n)
+                    tail = self._pack_jagged(slot.arrays, order[perm])
+                else:
+                    tail = {k: v[order] for k, v in slot.arrays.items()}
+                    tail = reshuffle(tail, self.shuffle_seed + slot.emit_seq)
             if self.track_emitted_rows:
                 self.emitted_rows.append(n)
             if self.telemetry is not None:

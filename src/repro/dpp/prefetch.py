@@ -88,6 +88,7 @@ class DevicePrefetcher:
         prep_fn: Optional[Callable[[HostBatch], Any]] = None,
         stats: Optional[ClientStats] = None,
         recycle_host: bool = False,
+        materialize: Any = None,
     ):
         assert depth >= 1
         self.source = source
@@ -95,6 +96,11 @@ class DevicePrefetcher:
         self.sharding = sharding
         self.prep_fn = prep_fn
         self.recycle_host = recycle_host
+        # device-side late materialization (DESIGN §3): a DeviceMaterializer
+        # that turns compact jagged payloads (arena + offsets) into dense
+        # device batches by running the kernels/fused pipeline on-device —
+        # dense batches (or a None materializer) take the plain path below
+        self.materialize = materialize
         self.stats = stats if stats is not None else (
             getattr(source, "stats", None) or ClientStats())
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
@@ -142,12 +148,24 @@ class DevicePrefetcher:
     def _transfer(self, host_batch: HostBatch):
         import jax
 
+        if self.materialize is not None and isinstance(host_batch, dict) \
+                and "_seq_len" in host_batch:
+            # compact jagged payload: upload arena+offsets only, densify and
+            # delta-decode ON DEVICE (kernels/fused); the [B, L] zero padding
+            # never crosses the link
+            dev = self.materialize(host_batch)
+            self.stats.h2d_bytes += self.materialize.last_h2d_bytes
+            jax.block_until_ready(dev)
+            return dev
         prepped = self.prep_fn(host_batch) if self.prep_fn else host_batch
         target = self.sharding if self.sharding is not None else self.device
         if target is not None:
             dev = jax.device_put(prepped, target)
         else:
             dev = jax.device_put(prepped)
+        if isinstance(prepped, dict):
+            self.stats.h2d_bytes += sum(
+                getattr(v, "nbytes", 0) for v in prepped.values())
         # block in THIS thread so the consumer receives resident buffers and
         # the H2D cost lands in the prefetcher's clock, not the train step
         jax.block_until_ready(dev)

@@ -6,6 +6,12 @@ materialization decodes whole batches of stripes at once. TPU mapping: grid =
 so a VMEM carry holds the running sum across column blocks of the same row
 (classic sequential-grid scan). Block shapes are (block_b, block_n) in VMEM,
 lane-aligned to 128.
+
+Carry-width contract: the scan accumulates in int32, so the kernel decodes
+**window-relative** offsets only — callers with int64 arenas (epoch-ms
+timestamps) must pass window-relative deltas with ``bases=0`` and re-add the
+per-row int64 base host-side (``ops.delta_decode`` does exactly this; see the
+regression test with timestamps > 2^31 in tests/test_kernels.py).
 """
 from __future__ import annotations
 

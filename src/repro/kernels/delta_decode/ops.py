@@ -1,20 +1,34 @@
-"""Public jit'd wrapper: pads ragged shapes to block multiples, picks
-interpret mode automatically off-TPU."""
+"""Public wrapper: pads ragged shapes to block multiples, picks interpret
+mode automatically off-TPU, and keeps int64 timestamp arenas exact.
+
+The kernel accumulates its carry in int32 (the only integer width the VMEM
+scan tiles natively), but the host arena stores epoch-millisecond
+timestamps as int64 (``featurize._EMPTY_I64``) — far above 2^31. Feeding
+those through the old ``astype(int32)`` cast silently wrapped every value.
+The fix decodes **relative to the per-row window base**: deltas within one
+materialization window span at most the window's duration (the codec
+contract — stripes are bounded time windows), so the int32 carry only ever
+holds window-relative offsets; the int64 base is re-added on the host where
+int64 arithmetic is exact. int32 inputs take the original single-kernel
+path unchanged.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import runtime
 from repro.kernels.delta_decode.delta_decode import delta_decode_kernel
 
+# max within-window delta span the int32 carry can hold; epoch-ms deltas in
+# one stripe are window-duration-bounded (days ~ 1e8 ms), far below this
+_I32_MAX = np.int64(2**31 - 1)
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
-
-def delta_decode(deltas: jax.Array, bases: jax.Array,
-                 block_b: int = 8, block_n: int = 128) -> jax.Array:
-    """Batched stripe timestamp decode; auto-pads to VMEM block multiples."""
+def _decode_i32(deltas: jax.Array, bases: jax.Array,
+                block_b: int, block_n: int) -> jax.Array:
+    """The padded int32 kernel call (both dtype paths bottom out here)."""
     b, n = deltas.shape
     bb = min(block_b, max(1, b))
     pb = (bb - b % bb) % bb
@@ -22,5 +36,35 @@ def delta_decode(deltas: jax.Array, bases: jax.Array,
     d = jnp.pad(deltas.astype(jnp.int32), ((0, pb), (0, pn)))
     bs = jnp.pad(bases.astype(jnp.int32), (0, pb))
     out = delta_decode_kernel(d, bs, block_b=bb, block_n=block_n,
-                              interpret=not _on_tpu())
+                              interpret=runtime.interpret_default())
     return out[:b, :n]
+
+
+def delta_decode(deltas: jax.Array, bases: jax.Array,
+                 block_b: int = 8, block_n: int = 128):
+    """Batched stripe timestamp decode; auto-pads to VMEM block multiples.
+
+    int32 inputs: decoded on-device, returns a (B, N) int32 jax array.
+    int64 inputs (epoch-ms arenas): the kernel decodes the window-relative
+    prefix sums in int32 and the per-row int64 base is re-added host-side —
+    returns a (B, N) int64 **numpy** array, exact for timestamps > 2^31.
+    """
+    d = np.asarray(deltas)
+    bs = np.asarray(bases)
+    b, n = d.shape
+    if b == 0 or n == 0:
+        wide = d.dtype == np.int64 or bs.dtype == np.int64
+        return np.zeros((b, n), np.int64 if wide else np.int32)
+    if d.dtype != np.int64 and bs.dtype != np.int64:
+        return _decode_i32(jnp.asarray(deltas), jnp.asarray(bases),
+                           block_b, block_n)
+    d64 = d.astype(np.int64, copy=False)
+    span = np.cumsum(d64, axis=1, dtype=np.int64)
+    if np.abs(d64).max(initial=0) > _I32_MAX or \
+            np.abs(span).max(initial=0) > _I32_MAX:
+        # window span exceeds the carry width: the codec contract is broken;
+        # decode exactly on the host rather than wrap on device
+        return span + bs.astype(np.int64)[:, None]
+    rel = _decode_i32(jnp.asarray(d64.astype(np.int32)),
+                      jnp.zeros(b, jnp.int32), block_b, block_n)
+    return np.asarray(rel).astype(np.int64) + bs.astype(np.int64)[:, None]

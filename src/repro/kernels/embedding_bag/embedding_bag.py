@@ -21,10 +21,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(ids_ref, mask_ref, table_ref, out_ref, acc, slots, sems, *, bag_len):
+def _kernel(ids_ref, mask_ref, table_ref, out_ref, acc, slots, sems, *,
+            bag_len, vocab):
     def dma(l, slot):
+        # clamp BEFORE the DMA is issued: padded/sentinel lanes carry
+        # arbitrary ids under mask==0, and an async copy from table[id] reads
+        # HBM unconditionally — an out-of-range id must never leave [0, V)
+        # even though its row is multiplied by zero afterwards
+        idx = jnp.clip(ids_ref[0, l], 0, vocab - 1)
         return pltpu.make_async_copy(
-            table_ref.at[pl.ds(ids_ref[0, l], 1), :], slots.at[slot], sems.at[slot]
+            table_ref.at[pl.ds(idx, 1), :], slots.at[slot], sems.at[slot]
         )
 
     dma(0, 0).start()
@@ -57,9 +63,9 @@ def embedding_bag_kernel(
 ) -> jax.Array:
     b, l = ids.shape
     v, d = table.shape
-    assert l == bag_len
+    assert l == bag_len, (l, bag_len)   # ops.py owns ragged-shape padding
     return pl.pallas_call(
-        functools.partial(_kernel, bag_len=bag_len),
+        functools.partial(_kernel, bag_len=bag_len, vocab=v),
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, l), lambda i: (i, 0), memory_space=pltpu.SMEM),

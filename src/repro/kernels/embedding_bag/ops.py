@@ -4,23 +4,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
                   combiner: str = "sum") -> jax.Array:
-    """(V, D) table, (B, L) ids/mask -> (B, D). Lane-pads D to 128."""
+    """(V, D) table, (B, L) ids/mask -> (B, D). Lane-pads D to 128.
+
+    ids are clamped into [0, V) inside the kernel before the row DMA — the
+    featurizer's zero-padded (and any sentinel-poisoned) lanes ride through
+    under mask==0 without ever addressing HBM out of bounds."""
     v, d = table.shape
-    dp = (128 - d % 128) % 128
-    t = jnp.pad(table, ((0, 0), (0, dp)))
-    out = embedding_bag_kernel(
-        t, ids.astype(jnp.int32), mask.astype(t.dtype), bag_len=ids.shape[1],
-        interpret=not _on_tpu(),
-    )[:, :d]
+    b, l = ids.shape
+    if b == 0 or l == 0:
+        # degenerate bags: a zero-step grid (or zero-trip DMA loop) is not a
+        # valid pallas_call — the masked reduction is identically zero
+        out = jnp.zeros((b, d), table.dtype)
+    else:
+        dp = (128 - d % 128) % 128
+        t = jnp.pad(table, ((0, 0), (0, dp)))
+        out = embedding_bag_kernel(
+            t, ids.astype(jnp.int32), mask.astype(t.dtype), bag_len=l,
+            interpret=runtime.interpret_default(),
+        )[:, :d]
     if combiner == "mean":
         denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1).astype(out.dtype)
         out = out / denom

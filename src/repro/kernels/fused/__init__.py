@@ -1,0 +1,7 @@
+"""Fused device-side late materialization (decode -> densify -> embed)."""
+from repro.kernels.fused.ops import (  # noqa: F401
+    fused_densify,
+    late_materialize,
+    pack_arena,
+    unpack_dense,
+)

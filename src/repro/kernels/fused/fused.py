@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused late materialization — jagged trait arena ->
+dense right-aligned [B, L, T] block with in-window timestamp delta-decode.
+
+This is the device half of the paper's §4.2 training-time reconstruction:
+the host ships only the compact values arena + offsets (no [B, L] zero
+padding over the wire), and the densify + decode run where the bandwidth
+is. All traits of a batch share one ScatterPlan, so their clipped tails
+stack as int32 columns of a single (N, T) arena (float traits ride
+bit-cast — see ops.pack_arena). TPU mapping mirrors ``kernels/jagged``:
+grid = (B,); each step DMAs the L-row window ending at ``offsets[b+1]``
+(wrapper front-pads by L so the window is always in-bounds) from HBM into
+a VMEM scratch, masks the invalid prefix, and — when the batch carries a
+delta-encoded timestamp column — rebuilds absolute timestamps with an
+in-VMEM cumsum plus the per-row (int32-wrapped) base before the (1, L, T)
+output block is written.
+
+The decode is the ``delta_decode`` recurrence inlined at its only training
+use site: the carry never leaves the row's VMEM window, so the int32-width
+hazard of the standalone kernel (see delta_decode/ops.py) cannot arise —
+window-relative offsets are duration-bounded by codec construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(offsets_ref, bases_ref, values_ref, out_ref, scratch, sem, *,
+            max_len, ts_col):
+    b = pl.program_id(0)
+    end = offsets_ref[b + 1] + max_len        # +max_len: wrapper front-pad
+    start = offsets_ref[b]
+    ln = jnp.minimum(end - max_len - start, max_len)
+    copy = pltpu.make_async_copy(
+        values_ref.at[pl.ds(end - max_len, max_len), :], scratch, sem)
+    copy.start()
+    copy.wait()
+    j = jax.lax.broadcasted_iota(jnp.int32, scratch.shape, 0)
+    valid = j >= (max_len - ln)
+    win = jnp.where(valid, scratch[...], 0)
+    if ts_col >= 0:
+        # in-window delta decode: the first kept element's delta is 0 by
+        # encoding, so the cumsum over the zero-masked window yields the
+        # window-relative offset at every valid lane; adding the wrapped
+        # int32 base reproduces exactly what device_put'ing the host-dense
+        # int64 timestamps canonicalizes to (x64 is disabled)
+        col = jax.lax.broadcasted_iota(jnp.int32, scratch.shape, 1) == ts_col
+        deltas = jnp.where(col, win, 0)
+        decoded = jnp.cumsum(deltas, axis=0, dtype=jnp.int32) + bases_ref[b]
+        win = jnp.where(jnp.logical_and(col, valid), decoded, win)
+    out_ref[0] = win
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "ts_col", "interpret"))
+def fused_densify_kernel(
+    values_padded: jax.Array,   # (N + max_len, T) int32: front-padded arena
+    offsets: jax.Array,         # (B+1,) int32
+    ts_bases: jax.Array,        # (B,) int32 (zeros when ts_col < 0)
+    max_len: int,
+    ts_col: int = -1,
+    interpret: bool = False,
+) -> jax.Array:
+    b = offsets.shape[0] - 1
+    t = values_padded.shape[1]
+    kern = functools.partial(_kernel, max_len=max_len, ts_col=ts_col)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # offsets (scalar loads)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # per-row ts bases
+            pl.BlockSpec(memory_space=pl.ANY),       # stacked arena in HBM
+        ],
+        out_specs=pl.BlockSpec((1, max_len, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, max_len, t), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((max_len, t), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(offsets, ts_bases, values_padded)

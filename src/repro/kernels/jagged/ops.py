@@ -4,11 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.jagged.jagged import jagged_to_padded_kernel
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def jagged_to_padded(values: jax.Array, offsets: jax.Array, max_len: int
@@ -18,8 +15,12 @@ def jagged_to_padded(values: jax.Array, offsets: jax.Array, max_len: int
     Front-pads values by max_len zero rows so the kernel's fixed-size DMA
     window is always in-bounds; lane-pads D to a multiple of 128."""
     n, d = values.shape
+    b = offsets.shape[0] - 1
+    if b == 0 or max_len == 0:
+        # zero-step grids / zero-row DMA windows are not valid pallas_calls
+        return jnp.zeros((b, max_len, d), values.dtype)
     dp = (128 - d % 128) % 128
     v = jnp.pad(values, ((max_len, 0), (0, dp)))
     out = jagged_to_padded_kernel(v, offsets.astype(jnp.int32), max_len,
-                                  interpret=not _on_tpu())
+                                  interpret=runtime.interpret_default())
     return out[:, :, :d]

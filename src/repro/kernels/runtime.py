@@ -1,0 +1,32 @@
+"""Shared kernel execution policy: where do the Pallas kernels run?
+
+Every public wrapper in ``kernels/*/ops.py`` asks :func:`interpret_default`
+whether to pass ``interpret=True`` to ``pl.pallas_call``. Off-TPU that is
+the Pallas **interpreter** executing the *same* kernel body (DMA windows,
+masks, sequential-grid carries) on CPU — NOT a numpy reference fallback.
+``ref.py`` modules exist only as oracles for the test sweeps; no wrapper
+ever routes through them, so tier-1 CI exercises the real kernel logic on
+every run (tests/test_kernels.py monkeypatches the refs to raise and proves
+it).
+
+``REPRO_KERNELS_FORCE_INTERPRET=1`` forces interpret mode even on a TPU
+backend — the parity-debugging escape hatch when a Mosaic lowering is
+suspected of diverging from the kernel's semantics.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True iff the default jax backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Whether ``pl.pallas_call`` should run in interpret mode by default."""
+    if os.environ.get("REPRO_KERNELS_FORCE_INTERPRET"):
+        return True
+    return not on_tpu()

@@ -83,6 +83,141 @@ class Roofline:
         }
 
 
+H2D_BW = 32e9            # bytes/s host->device link (PCIe gen4 x16 class)
+
+
+@dataclasses.dataclass
+class MaterializationRoofline:
+    """Link/HBM model for the late-materialization handover (DESIGN §3).
+
+    Compares the two ways a [B, L] dense batch can come to exist on device:
+
+    * **host-dense**: the host scatters the jagged arena into zero-padded
+      [B, L] arrays and ships them whole — H2D bytes scale with B*L*T
+      regardless of fill;
+    * **device (compact)**: only the arena + offsets cross the link
+      (bytes scale with the *kept* elements), and the ``kernels/fused`` op
+      rebuilds the dense layout on-accelerator.
+
+    The fused op's HBM traffic is one arena read + one dense write. A STAGED
+    device pipeline (densify kernel -> HBM -> separate decode kernel) pays the
+    dense intermediate twice more (write + re-read), which is the quantitative
+    case for fusing decode INTO densify. Fusing the embedding lookup as well
+    buys nothing for training: the dense id lanes must reach HBM for the jit'd
+    step either way (the table is a trained param inside it), so the fusion
+    boundary stops at decode+densify — ``t_embed_extra`` is what a fused
+    embed would merely relocate, not remove.
+    """
+
+    batch: int
+    seq_len: int
+    n_traits: int
+    arena_rows: int          # total kept elements (sum of clipped row lens)
+    itemsize: int = 4        # arena lane width (int32/float32 packing)
+    table_dim: int = 0       # embedding width D; 0 = no embed stage modeled
+
+    @property
+    def fill(self) -> float:
+        """Occupancy of the dense layout: kept / (B * L)."""
+        return self.arena_rows / max(self.batch * self.seq_len, 1)
+
+    @property
+    def dense_h2d_bytes(self) -> int:
+        return self.batch * self.seq_len * self.n_traits * self.itemsize
+
+    @property
+    def compact_h2d_bytes(self) -> int:
+        # arena + shared offsets + per-row lens (both int32 [B(+1)])
+        return (self.arena_rows * self.n_traits * self.itemsize
+                + (self.batch + 1) * 4 + self.batch * 4)
+
+    @property
+    def h2d_savings(self) -> float:
+        """Fraction of link bytes the compact payload avoids."""
+        return 1.0 - self.compact_h2d_bytes / max(self.dense_h2d_bytes, 1)
+
+    @property
+    def t_h2d_dense(self) -> float:
+        return self.dense_h2d_bytes / H2D_BW
+
+    @property
+    def t_h2d_compact(self) -> float:
+        return self.compact_h2d_bytes / H2D_BW
+
+    @property
+    def fused_hbm_bytes(self) -> int:
+        """One arena read + one dense write (decode rides in VMEM for free)."""
+        return (self.arena_rows * self.n_traits * self.itemsize
+                + self.dense_h2d_bytes)
+
+    @property
+    def staged_hbm_bytes(self) -> int:
+        """Separate densify and decode kernels: the dense intermediate is
+        written, re-read, and rewritten through HBM between the stages."""
+        return self.fused_hbm_bytes + 2 * self.dense_h2d_bytes
+
+    @property
+    def t_fused(self) -> float:
+        return self.fused_hbm_bytes / HBM_BW
+
+    @property
+    def t_staged(self) -> float:
+        return self.staged_hbm_bytes / HBM_BW
+
+    @property
+    def t_embed_extra(self) -> float:
+        """HBM time a fused embed stage would RELOCATE (not remove): the id
+        lane re-read plus the table-row gather, both paid identically by the
+        jit'd step's own lookup."""
+        if self.table_dim <= 0:
+            return 0.0
+        ids = self.batch * self.seq_len * self.itemsize
+        rows = self.batch * self.seq_len * self.table_dim * self.itemsize
+        return (ids + rows) / HBM_BW
+
+    @property
+    def t_device_path(self) -> float:
+        return self.t_h2d_compact + self.t_fused
+
+    @property
+    def t_host_path(self) -> float:
+        """Link time only — host scatter cost is measured, not modeled (see
+        benchmarks/bench_device_mat.py)."""
+        return self.t_h2d_dense
+
+    @property
+    def device_wins(self) -> bool:
+        return self.t_device_path < self.t_host_path
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "batch": self.batch, "seq_len": self.seq_len,
+            "n_traits": self.n_traits, "arena_rows": self.arena_rows,
+            "fill": self.fill,
+            "dense_h2d_bytes": self.dense_h2d_bytes,
+            "compact_h2d_bytes": self.compact_h2d_bytes,
+            "h2d_savings": self.h2d_savings,
+            "t_h2d_dense_s": self.t_h2d_dense,
+            "t_h2d_compact_s": self.t_h2d_compact,
+            "t_fused_s": self.t_fused,
+            "t_staged_s": self.t_staged,
+            "t_embed_extra_s": self.t_embed_extra,
+            "t_device_path_s": self.t_device_path,
+            "t_host_path_s": self.t_host_path,
+            "device_wins": self.device_wins,
+        }
+
+
+def materialization_roofline(batch: int, seq_len: int, n_traits: int,
+                             arena_rows: int, itemsize: int = 4,
+                             table_dim: int = 0) -> MaterializationRoofline:
+    """Model the host-dense vs device-compact materialization handover for
+    one batch shape (see ``MaterializationRoofline``)."""
+    return MaterializationRoofline(
+        batch=batch, seq_len=seq_len, n_traits=n_traits,
+        arena_rows=arena_rows, itemsize=itemsize, table_dim=table_dim)
+
+
 def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
                   cost: Optional[Dict[str, float]],
                   link_bytes: float, collective_counts: Dict[str, int],

@@ -37,6 +37,12 @@ class TrainerConfig:
     # N+1 while step N computes (0 disables; 2 = classic double buffering).
     # Ignored when ``fit`` is handed an already-wrapped DevicePrefetcher.
     prefetch_depth: int = 0
+    # device-side late materialization (DESIGN §3): when fit auto-wraps the
+    # feed in a DevicePrefetcher, attach a DeviceMaterializer so compact
+    # jagged payloads (from a ``RebatchingClient(emit_jagged=True)``) densify
+    # and delta-decode ON DEVICE. Dense host batches pass through untouched,
+    # so the flag is safe to leave on. Requires prefetch_depth > 0.
+    device_materialize: bool = False
     # streaming feed mode: bound ``fit`` by wall clock instead of (or in
     # addition to) max_steps — an online trainer's stream never exhausts.
     max_wall_s: Optional[float] = None
@@ -162,7 +168,12 @@ class Trainer:
         feed = batches
         if (self.cfg.prefetch_depth > 0
                 and not isinstance(feed, (DevicePrefetcher, Feed))):
-            feed = DevicePrefetcher(feed, depth=self.cfg.prefetch_depth)
+            materialize = None
+            if self.cfg.device_materialize:
+                from repro.dpp.device_mat import DeviceMaterializer
+                materialize = DeviceMaterializer()
+            feed = DevicePrefetcher(feed, depth=self.cfg.prefetch_depth,
+                                    materialize=materialize)
         # GPU-busy accounting feeds the elastic controller's starvation signal
         record = getattr(feed, "record_train_step", None)
         self._fit_feed = feed if isinstance(feed, Feed) else None

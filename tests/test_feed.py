@@ -392,3 +392,148 @@ def test_device_prefetcher_wraps_plain_iterables():
     assert len(got) == 4
     for i, g in enumerate(got):
         np.testing.assert_array_equal(g, np.full((2, 2), i))
+
+
+# ---------------------------------------------------------------------------
+# Device-side late materialization (DESIGN §3): jagged emission + fused densify
+# ---------------------------------------------------------------------------
+
+SPEC_TS = FeatureSpec(
+    seq_len=7,
+    uih_traits=("item_id", "action", "flag", "score", "timestamp"),
+    candidate_fields=("item_id",), label_fields=("click",))
+
+
+def _synth_batch_ts(rng, b, seq_len, drop_trait_at=(), ts_base=3_000_000_000):
+    """Like ``_synth_batch`` but with epoch-scale (> 2^31) timestamps — the
+    range whose decode used to wrap in an int32 kernel carry."""
+    exs, uihs = _synth_batch(rng, b, seq_len, drop_trait_at=drop_trait_at)
+    for u in uihs:
+        u["timestamp"] = u["timestamp"] + np.int64(ts_base)
+    for i, e in enumerate(exs):
+        exs[i] = TrainingExample(
+            request_id=e.request_id, user_id=e.user_id,
+            request_ts=e.request_ts + ts_base, label_ts=e.label_ts,
+            candidate=e.candidate, labels=e.labels)
+    return exs, uihs
+
+
+def _run_client(chunks, spec, full, seed, emit_jagged):
+    c = RebatchingClient(full, buffer_batches=1024, shuffle_seed=seed,
+                         emit_jagged=emit_jagged)
+    for e, u in chunks:
+        c.put_jagged(featurize_jagged(e, u, spec))
+    c.close()
+    return list(c)
+
+
+def _jagged_chunks(rng, n, spec, rows_hi=11):
+    chunks = []
+    for k in range(n):
+        drop = (1,) if k == 1 else ()
+        chunks.append(_synth_batch_ts(rng, int(rng.integers(1, rows_hi)),
+                                      spec.seq_len, drop_trait_at=drop))
+    return chunks
+
+
+def test_jagged_emission_matches_dense_via_host_oracle():
+    """emit_jagged=True must carry EXACTLY the dense path's rows: the compact
+    payloads, scattered back on the host (densify_host), reproduce the dense
+    client's batches byte-for-byte — including the reshuffle, a trait with
+    schema-drift (own offsets), int64 timestamps past 2^31, and the
+    remainder flush on close()."""
+    from repro.dpp.device_mat import densify_host, is_jagged_batch
+
+    rng = np.random.default_rng(20)
+    chunks = _jagged_chunks(rng, 6, SPEC_TS)
+    dense = _run_client(chunks, SPEC_TS, 8, seed=5, emit_jagged=False)
+    jag = _run_client(chunks, SPEC_TS, 8, seed=5, emit_jagged=True)
+    assert len(dense) == len(jag) and dense
+    for d, jg in zip(dense, jag):
+        assert is_jagged_batch(jg) and not is_jagged_batch(d)
+        assert_batch_equal(densify_host(jg), d)
+    # the drop-trait batch forced at least one own-offsets trait somewhere
+    assert any(f"_offsets_flag" in jg for jg in jag)
+    # exactness: timestamps stayed int64 through the compact payload
+    assert all(jg["_arena_timestamp"].dtype == np.int64 for jg in jag)
+
+
+def test_jagged_emission_device_parity_byte_identical():
+    """The tentpole acceptance: DeviceMaterializer(payload) ==
+    jax.device_put(host_dense_batch) — same keys (host insertion order; note
+    device_put itself SORTS dict keys), same canonical dtypes, same bytes."""
+    import jax
+
+    from repro.dpp.device_mat import DeviceMaterializer
+
+    rng = np.random.default_rng(21)
+    chunks = _jagged_chunks(rng, 5, SPEC_TS)
+    dense = _run_client(chunks, SPEC_TS, 8, seed=3, emit_jagged=False)
+    jag = _run_client(chunks, SPEC_TS, 8, seed=3, emit_jagged=True)
+    mat = DeviceMaterializer()
+    for d, jg in zip(dense, jag):
+        want = jax.device_put(d)
+        got = mat(jg)
+        assert list(got.keys()) == list(d.keys())
+        assert mat.last_h2d_bytes > 0
+        for k in d:
+            assert got[k].dtype == want[k].dtype, k
+            assert got[k].shape == want[k].shape, k
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]), err_msg=k)
+
+
+def test_jagged_emission_all_empty_sequences():
+    import jax
+
+    from repro.dpp.device_mat import DeviceMaterializer, densify_host
+
+    rng = np.random.default_rng(22)
+    exs, uihs = _synth_batch_ts(rng, 5, SPEC_TS.seq_len)
+    uihs = [{k: v[:0] for k, v in u.items()} for u in uihs]
+    chunks = [(exs, uihs)]
+    dense = _run_client(chunks, SPEC_TS, 8, seed=0, emit_jagged=False)
+    jag = _run_client(chunks, SPEC_TS, 8, seed=0, emit_jagged=True)
+    assert len(dense) == len(jag) == 1
+    assert_batch_equal(densify_host(jag[0]), dense[0])
+    got = DeviceMaterializer()(jag[0])
+    want = jax.device_put(dense[0])
+    for k in dense[0]:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+
+
+def test_jagged_emission_rejects_dense_put():
+    c = RebatchingClient(8, shuffle_seed=0, emit_jagged=True)
+    with pytest.raises(TypeError, match="emit_jagged"):
+        c.put({"a": np.arange(4)})
+
+
+def test_device_prefetcher_materializes_jagged_payloads():
+    """E2E through the transfer thread: prefetcher + DeviceMaterializer
+    yields the same batches as the host-dense path, and ships strictly fewer
+    bytes over the link (ClientStats.h2d_bytes)."""
+    import jax
+
+    from repro.dpp.device_mat import DeviceMaterializer
+
+    rng = np.random.default_rng(23)
+    chunks = _jagged_chunks(rng, 5, SPEC_TS)
+    dense = _run_client(chunks, SPEC_TS, 8, seed=1, emit_jagged=False)
+    dense_bytes = sum(v.nbytes for d in dense for v in d.values())
+
+    cj = RebatchingClient(8, buffer_batches=1024, shuffle_seed=1,
+                          emit_jagged=True)
+    for e, u in chunks:
+        cj.put_jagged(featurize_jagged(e, u, SPEC_TS))
+    cj.close()
+    pf = DevicePrefetcher(cj, depth=2, materialize=DeviceMaterializer())
+    got = list(pf)
+    assert len(got) == len(dense)
+    for g, d in zip(got, dense):
+        want = jax.device_put(d)
+        assert set(g) == set(d)
+        for k in d:
+            np.testing.assert_array_equal(np.asarray(g[k]),
+                                          np.asarray(want[k]), err_msg=k)
+    assert 0 < cj.stats.h2d_bytes < dense_bytes
